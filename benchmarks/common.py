@@ -1,0 +1,75 @@
+"""Shared benchmark infrastructure: scenario pools, one trained m4 artifact
+(cached on disk), error metrics."""
+from __future__ import annotations
+
+import copy
+import os
+import time
+
+import numpy as np
+
+from repro.core.events import build_event_batch
+from repro.core.flowsim import run_flowsim
+from repro.core.model import M4Config
+from repro.core.simulate import simulate_open_loop
+from repro.core.training import train_m4
+from repro.data.traffic import Scenario, sample_scenario
+from repro.net.packetsim import PacketSim
+from repro.runtime import checkpoint as ckpt
+
+# CI-scale m4 (paper: hidden=400, gnn=300, mlp=200 — same structure)
+BENCH_M4 = M4Config(hidden=96, gnn_dim=64, mlp_hidden=64,
+                    snap_flows=16, snap_links=48)
+CKPT_DIR = os.path.join(os.path.dirname(__file__), "..", "results", "m4_ckpt")
+
+N_TRAIN_SIMS = 12
+FLOWS_PER_SIM = 150
+EPOCHS = 10
+
+
+def ground_truth(sc: Scenario):
+    return PacketSim(sc.topo, sc.config, seed=0).run(
+        copy.deepcopy(sc.generate()))
+
+
+def trained_m4(force=False, log=print):
+    """Train (or load) the benchmark m4 model. Returns (params, cfg)."""
+    from repro.core.model import init_m4
+    import jax
+    cfg = BENCH_M4
+    proto = init_m4(jax.random.PRNGKey(0), cfg)
+    if not force and ckpt.latest_step(CKPT_DIR) is not None:
+        (params,), _ = ckpt.restore(CKPT_DIR, (proto,))
+        return params, cfg
+    t0 = time.perf_counter()
+    batches = []
+    for seed in range(N_TRAIN_SIMS):
+        sc = sample_scenario(seed, num_flows=FLOWS_PER_SIM, synthetic=True)
+        batches.append(build_event_batch(ground_truth(sc), cfg))
+    log(f"[bench] generated {len(batches)} training sims "
+        f"({time.perf_counter()-t0:.0f}s)")
+    state, hist = train_m4(batches, cfg, epochs=EPOCHS, lr=1e-3, log=log)
+    ckpt.save(CKPT_DIR, EPOCHS, (state.params,))
+    return state.params, cfg
+
+
+def eval_scenario(params, cfg, sc: Scenario, trace=None):
+    """Returns dict of per-flow slowdown errors + wallclocks."""
+    trace = trace or ground_truth(sc)
+    gt = trace.slowdowns
+    flows = sc.generate()
+    t0 = time.perf_counter()
+    fs = run_flowsim(sc.topo, copy.deepcopy(flows))
+    m4 = simulate_open_loop(params, cfg, sc.topo, sc.config, flows)
+    e_fs = np.abs(fs.slowdowns - gt) / gt
+    e_m4 = np.abs(m4.slowdowns - gt) / gt
+    return {
+        "flowsim_mean": float(np.nanmean(e_fs)),
+        "flowsim_p90": float(np.nanpercentile(e_fs, 90)),
+        "m4_mean": float(np.nanmean(e_m4)),
+        "m4_p90": float(np.nanpercentile(e_m4, 90)),
+        "gt_tail_sldn": float(np.nanpercentile(gt, 99)),
+        "fs_tail_sldn": float(np.nanpercentile(fs.slowdowns, 99)),
+        "m4_tail_sldn": float(np.nanpercentile(m4.slowdowns, 99)),
+        "t_flowsim": fs.wallclock, "t_m4": m4.wallclock,
+    }

@@ -1,0 +1,54 @@
+"""§Perf cell 3 H1: mamba2-1.3b long_500k right-sizing. Lower the same
+serve_step on the 256-chip production mesh and a 16-chip slice; compare
+per-device flops/bytes (expect ≈ equal -> right-sizing is free, per-chip
+utilization x16).  PYTHONPATH=src python -m benchmarks.rightsize_mamba2
+"""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+import json
+
+import jax
+
+from repro import configs
+from repro.launch.dryrun import (abstract_params, collective_bytes,
+                                 make_steps, named)
+from repro.launch.sharding import batch_spec, decode_state_spec, param_spec
+
+
+def lower_on(mesh, cfg, shape):
+    S, B, kind = configs.SHAPES[shape]
+    _, specs = configs.input_specs(cfg, shape)
+    _, _, serve = make_steps(cfg)
+    params_abs = abstract_params(cfg)
+    p_sh = named(mesh, jax.tree_util.tree_map_with_path(param_spec, params_abs))
+    b_sh = named(mesh, batch_spec(specs["batch"], mesh, B))
+    s_sh = named(mesh, decode_state_spec(specs["state"], mesh, cfg, B))
+    with mesh:
+        compiled = jax.jit(serve, in_shardings=(p_sh, s_sh, b_sh)).lower(
+            params_abs, specs["state"], specs["batch"]).compile()
+    cost = compiled.cost_analysis() or {}
+    coll, _, _ = collective_bytes(compiled.as_text())
+    return dict(flops_dev=cost.get("flops", 0.0),
+                bytes_dev=cost.get("bytes accessed", 0.0),
+                coll_bytes_dev=coll, devices=int(mesh.size))
+
+
+def main():
+    cfg = configs.get_config("mamba2-1.3b")
+    big = jax.make_mesh((16, 16), ("data", "model"))
+    small = jax.make_mesh((1, 16), ("data", "model"))
+    r_big = lower_on(big, cfg, "long_500k")
+    r_small = lower_on(small, cfg, "long_500k")
+    out = {"mesh_256": r_big, "mesh_16": r_small,
+           "bytes_ratio": r_small["bytes_dev"] / max(r_big["bytes_dev"], 1),
+           "flops_ratio": r_small["flops_dev"] / max(r_big["flops_dev"], 1)}
+    os.makedirs("results/roofline", exist_ok=True)
+    with open("results/roofline/mamba2_rightsize.json", "w") as f:
+        json.dump({**out, "skipped": True, "note":
+                   "right-sizing probe, not a roofline cell"}, f, indent=1)
+    print(json.dumps(out, indent=1))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Paper Table 1: packet-level (ns-3 stand-in) vs flowSim — wallclock,
+per-flow slowdown error, tail slowdown. Three scenarios mirroring the
+paper's (CacheFollower/DCTCP, Hadoop/TIMELY, Hadoop/DCTCP 1-to-1)."""
+from __future__ import annotations
+
+import copy
+import time
+
+import numpy as np
+
+from repro.core.flowsim import run_flowsim
+from repro.data.traffic import Scenario
+from repro.net.packetsim import NetConfig, PacketSim
+from repro.net.topology import paper_train_topo
+
+
+def scenarios(num_flows):
+    return [
+        ("CacheFollower/DCTCP/4-1",
+         Scenario(topo=paper_train_topo("4-to-1"), config=NetConfig(cc="dctcp"),
+                  size_dist="CacheFollower", max_load=0.35, sigma=1.0,
+                  matrix="A", num_flows=num_flows, seed=101)),
+        ("Hadoop/TIMELY/4-1",
+         Scenario(topo=paper_train_topo("4-to-1"), config=NetConfig(cc="timely"),
+                  size_dist="Hadoop", max_load=0.58, sigma=1.0,
+                  matrix="C", num_flows=num_flows, seed=102)),
+        ("Hadoop/DCTCP/1-1",
+         Scenario(topo=paper_train_topo("1-to-1"), config=NetConfig(cc="dctcp"),
+                  size_dist="Hadoop", max_load=0.74, sigma=2.0,
+                  matrix="C", num_flows=num_flows, seed=103)),
+    ]
+
+
+def run(num_flows=400, log=print):
+    rows = []
+    log("scenario, t_ns3_s, t_flowsim_s, speedup, err_mean, err_p90, "
+        "tail_ns3, tail_flowsim")
+    for name, sc in scenarios(num_flows):
+        t0 = time.perf_counter()
+        trace = PacketSim(sc.topo, sc.config, seed=0).run(
+            copy.deepcopy(sc.generate()))
+        t_ns3 = time.perf_counter() - t0
+        gt = trace.slowdowns
+        fs = run_flowsim(sc.topo, sc.generate())
+        err = np.abs(fs.slowdowns - gt) / gt
+        row = dict(
+            scenario=name, t_ns3=t_ns3, t_flowsim=fs.wallclock,
+            speedup=t_ns3 / max(fs.wallclock, 1e-9),
+            err_mean=float(np.nanmean(err)),
+            err_p90=float(np.nanpercentile(err, 90)),
+            tail_ns3=float(np.nanpercentile(gt, 99)),
+            tail_fs=float(np.nanpercentile(fs.slowdowns, 99)))
+        rows.append(row)
+        log(f"{name}, {t_ns3:.2f}, {fs.wallclock:.3f}, "
+            f"{row['speedup']:.0f}x, {row['err_mean']:.3f}, "
+            f"{row['err_p90']:.3f}, {row['tail_ns3']:.2f}, {row['tail_fs']:.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

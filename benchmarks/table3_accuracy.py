@@ -1,0 +1,65 @@
+"""Paper Table 3 + Figures 6-8: m4 vs flowSim accuracy on held-out
+empirical workloads (CacheFollower / WebServer / Hadoop), plus runtime.
+Also emits the per-slowdown-bucket error breakdown (Fig. 8)."""
+from __future__ import annotations
+
+import copy
+
+import numpy as np
+
+from repro.core.flowsim import run_flowsim
+from repro.core.simulate import simulate_open_loop
+from repro.data.traffic import Scenario
+from repro.net.packetsim import NetConfig
+from repro.net.topology import paper_train_topo
+
+from .common import eval_scenario, ground_truth, trained_m4
+
+
+def scenarios(num_flows):
+    out = []
+    for i, dist in enumerate(["CacheFollower", "WebServer", "Hadoop"]):
+        out.append((dist, Scenario(
+            topo=paper_train_topo("2-to-1"), config=NetConfig(cc="dctcp"),
+            size_dist=dist, max_load=0.5, sigma=1.0, matrix="B",
+            num_flows=num_flows, seed=200 + i)))
+    return out
+
+
+def run(num_flows=300, log=print):
+    params, cfg = trained_m4(log=log)
+    rows = []
+    log("workload, method, err_mean, err_p90, tail_sldn, time_s")
+    buckets_all = {}
+    for name, sc in scenarios(num_flows):
+        trace = ground_truth(sc)
+        r = eval_scenario(params, cfg, sc, trace)
+        rows.append({"workload": name, **r})
+        log(f"{name}, flowSim, {r['flowsim_mean']:.3f}, {r['flowsim_p90']:.3f},"
+            f" {r['fs_tail_sldn']:.2f}, {r['t_flowsim']:.2f}")
+        log(f"{name}, m4,      {r['m4_mean']:.3f}, {r['m4_p90']:.3f},"
+            f" {r['m4_tail_sldn']:.2f}, {r['t_m4']:.2f}")
+        log(f"{name}, ns3-gt,  -, -, {r['gt_tail_sldn']:.2f}, -")
+
+        # Fig 8: error by slowdown bucket
+        gt = trace.slowdowns
+        m4r = simulate_open_loop(params, cfg, sc.topo, sc.config, sc.generate())
+        fsr = run_flowsim(sc.topo, sc.generate())
+        edges = [1.0, 1.5, 2.0, 3.0, 5.0, np.inf]
+        for lo, hi in zip(edges[:-1], edges[1:]):
+            m = (gt >= lo) & (gt < hi)
+            if m.sum() < 3:
+                continue
+            key = f"[{lo},{hi})"
+            b = buckets_all.setdefault(key, {"n": 0, "m4": [], "fs": []})
+            b["n"] += int(m.sum())
+            b["m4"].append(float(np.median(np.abs(m4r.slowdowns[m] - gt[m]) / gt[m])))
+            b["fs"].append(float(np.median(np.abs(fsr.slowdowns[m] - gt[m]) / gt[m])))
+    log("\nsldn_bucket, n_flows, median_err_flowsim, median_err_m4")
+    for k, b in buckets_all.items():
+        log(f"{k}, {b['n']}, {np.mean(b['fs']):.3f}, {np.mean(b['m4']):.3f}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

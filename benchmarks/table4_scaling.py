@@ -1,0 +1,45 @@
+"""Paper Table 4: runtime scaling with topology size. We scale the fat-tree
+and flow count and compare flowSim's event loop against m4's fixed-size
+jitted event step (the paper's speedup comes from constant-cost GPU steps
+vs flowSim's O(active-flows) waterfilling; the same structure shows here).
+Also reports events/sec so the trend is hardware-independent."""
+from __future__ import annotations
+
+import copy
+import time
+
+import numpy as np
+
+from repro.core.flowsim import run_flowsim
+from repro.core.simulate import simulate_open_loop
+from repro.data.traffic import Scenario
+from repro.net.packetsim import NetConfig
+from repro.net.topology import FatTree
+
+from .common import trained_m4
+
+
+def run(sizes=((8, 4), (16, 8), (32, 8), (64, 16)), flows_base=150, log=print):
+    params, cfg = trained_m4(log=log)
+    log("racks, hosts, flows, t_flowsim_s, t_m4_s, ratio, m4_events_per_s")
+    rows = []
+    for racks, hpr in sizes:
+        topo = FatTree(num_racks=racks, hosts_per_rack=hpr,
+                       num_spines=max(2, hpr // 2))
+        n = flows_base * racks // 8
+        sc = Scenario(topo=topo, config=NetConfig(cc="dctcp"),
+                      size_dist="WebServer", max_load=0.5, sigma=1.0,
+                      matrix="A", num_flows=n, seed=300 + racks)
+        flows = sc.generate()
+        fs = run_flowsim(topo, copy.deepcopy(flows))
+        res = simulate_open_loop(params, cfg, topo, sc.config, flows)
+        rows.append(dict(racks=racks, hosts=topo.num_hosts, flows=n,
+                         t_flowsim=fs.wallclock, t_m4=res.wallclock))
+        log(f"{racks}, {topo.num_hosts}, {n}, {fs.wallclock:.2f}, "
+            f"{res.wallclock:.2f}, {fs.wallclock/res.wallclock:.2f}x, "
+            f"{2*n/res.wallclock:.0f}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,52 @@
+"""Paper Table 5 / Fig 12: dense-supervision ablation. Trains m4 three ways
+(full, w/o remaining-size loss, w/o queue-length loss) on the same data and
+compares held-out per-flow slowdown error."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.events import build_event_batch
+from repro.core.training import train_m4
+from repro.data.traffic import sample_scenario
+
+from .common import BENCH_M4, EPOCHS, FLOWS_PER_SIM, N_TRAIN_SIMS, \
+    eval_scenario, ground_truth
+
+
+def run(log=print, n_train=N_TRAIN_SIMS, n_eval=3):
+    cfg = BENCH_M4
+    batches, eval_pairs = [], []
+    for seed in range(n_train):
+        sc = sample_scenario(seed, num_flows=FLOWS_PER_SIM, synthetic=True)
+        batches.append(build_event_batch(ground_truth(sc), cfg))
+    for seed in range(1000, 1000 + n_eval):
+        sc = sample_scenario(seed, num_flows=FLOWS_PER_SIM, synthetic=False)
+        eval_pairs.append((sc, ground_truth(sc)))
+
+    rows = []
+    log("variant, err_mean, err_p90, tail_sldn_err")
+    for name, kw in [("m4 (full)", {}),
+                     ("w/o size", {"ablate_size": True}),
+                     ("w/o queue", {"ablate_queue": True})]:
+        state, _ = train_m4(batches, cfg, epochs=EPOCHS, lr=1e-3,
+                            log=lambda *a: None, **kw)
+        means, p90s, tails = [], [], []
+        for sc, trace in eval_pairs:
+            r = eval_scenario(state.params, cfg, sc, trace)
+            means.append(r["m4_mean"])
+            p90s.append(r["m4_p90"])
+            tails.append(abs(r["m4_tail_sldn"] - r["gt_tail_sldn"])
+                         / r["gt_tail_sldn"])
+        row = dict(variant=name, mean=float(np.mean(means)),
+                   p90=float(np.mean(p90s)), tail=float(np.mean(tails)))
+        rows.append(row)
+        log(f"{name}, {row['mean']:.3f}, {row['p90']:.3f}, {row['tail']:.3f}")
+    # flowSim reference on the same eval set
+    fs_means = [eval_scenario(state.params, cfg, sc, tr)["flowsim_mean"]
+                for sc, tr in eval_pairs[:1]]
+    log(f"flowSim reference mean err: {np.mean(fs_means):.3f}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

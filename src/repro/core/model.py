@@ -1,0 +1,158 @@
+"""m4's neural architecture (§3.2, §4).
+
+Four GRUs (GRU-1/GRU-A temporal for flows/links, GRU-2/GRU-B post-GNN),
+a 3-layer GraphSAGE GNN (sum aggregator) on the bipartite flow-link
+snapshot graph, and three query MLPs (FCT slowdown, remaining size, queue
+length). Defaults follow the paper: 400-d hidden states, 300-d GNN
+embeddings, 200-d 2-layer MLPs, 9-d network-config vector input.
+
+TPU adaptation (DESIGN.md §3): snapshots are fixed-size padded index sets
+(SNAP_F flows, SNAP_L links, max path P), so one event step is a single
+static XLA program; message passing is gather + segment-sum, implemented
+optionally by the Pallas kernel in `repro.kernels.bipartite`.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from ..nn import gru_cell, gru_init, linear, linear_init, mlp, mlp_init
+
+
+@dataclass(frozen=True)
+class M4Config:
+    hidden: int = 400
+    gnn_dim: int = 300
+    mlp_hidden: int = 200
+    gnn_layers: int = 3
+    snap_flows: int = 64     # SNAP_F
+    snap_links: int = 128    # SNAP_L
+    max_path: int = 8        # P
+    cfg_dim: int = 9
+    dense_sldn: bool = True
+    use_pallas: bool = False  # bipartite message passing via Pallas kernel
+
+    @property
+    def flow_feat(self):
+        return 3  # log size, n_links, log ideal_fct
+
+    @property
+    def link_feat(self):
+        return 1  # log capacity
+
+
+def init_m4(key, cfg: M4Config):
+    H, G, M, C = cfg.hidden, cfg.gnn_dim, cfg.mlp_hidden, cfg.cfg_dim
+    ks = jax.random.split(key, 16)
+    p = {
+        "flow_init": mlp_init(ks[0], [cfg.flow_feat + C, M, H]),
+        "link_init": mlp_init(ks[1], [cfg.link_feat + C, M, H]),
+        "gru1": gru_init(ks[2], 1 + cfg.flow_feat + C, H),   # flow temporal
+        "gruA": gru_init(ks[3], 1 + cfg.link_feat + C, H),   # link temporal
+        "proj_f": linear_init(ks[4], H, G),
+        "proj_l": linear_init(ks[5], H, G),
+        "gnn": [
+            {"wf": linear_init(jax.random.fold_in(ks[6], i), 2 * G, G),
+             "wl": linear_init(jax.random.fold_in(ks[7], i), 2 * G, G)}
+            for i in range(cfg.gnn_layers)
+        ],
+        "gru2": gru_init(ks[8], G + C, H),                   # flow post-GNN
+        "gruB": gru_init(ks[9], G + C, H),                   # link post-GNN
+        "mlp_sldn": mlp_init(ks[10], [H + 1 + C, M, M, 1]),
+        "mlp_size": mlp_init(ks[11], [H, M, M, 1]),
+        "mlp_queue": mlp_init(ks[12], [H, M, M, 1]),
+    }
+    return p
+
+
+# ---------------------------------------------------------------- features
+def time_feat(dt):
+    """dt seconds -> bounded feature."""
+    return jnp.log1p(jnp.maximum(dt, 0.0) / 1e-6) / 10.0
+
+
+def flow_static_feat(size_bytes, n_links, ideal_fct):
+    return jnp.stack([
+        jnp.log1p(size_bytes / 1e3) / 10.0,
+        n_links / 8.0,
+        jnp.log1p(ideal_fct / 1e-6) / 10.0,
+    ], axis=-1)
+
+
+def link_static_feat(capacity):
+    return jnp.log1p(capacity / 1e9)[..., None] / 10.0
+
+
+# ---------------------------------------------------------------- GNN
+def _bipartite_round(layer, f_emb, l_emb, edge_f, edge_l, edge_mask, n_links):
+    """One GraphSAGE round with sum aggregation.
+
+    f_emb: (F, G), l_emb: (L, G); edges (E,) flow-slot / link-slot / mask.
+    """
+    ef = f_emb[edge_f] * edge_mask[:, None]
+    agg_l = jax.ops.segment_sum(ef, edge_l, num_segments=n_links)
+    el = l_emb[edge_l] * edge_mask[:, None]
+    agg_f = jax.ops.segment_sum(el, edge_f, num_segments=f_emb.shape[0])
+    f_new = jax.nn.relu(linear(layer["wf"], jnp.concatenate([f_emb, agg_f], -1)))
+    l_new = jax.nn.relu(linear(layer["wl"], jnp.concatenate([l_emb, agg_l], -1)))
+    return f_new, l_new
+
+
+def gnn_forward(params, cfg: M4Config, f_h, l_h, edge_f, edge_l, edge_mask):
+    """f_h: (SNAP_F, H), l_h: (SNAP_L, H) -> GNN embeddings (·, G)."""
+    f = jax.nn.relu(linear(params["proj_f"], f_h))
+    l = jax.nn.relu(linear(params["proj_l"], l_h))
+    if cfg.use_pallas:
+        from ..kernels.bipartite.ops import bipartite_rounds
+        return bipartite_rounds(params["gnn"], f, l, edge_f, edge_l, edge_mask)
+    for layer in params["gnn"]:
+        f, l = _bipartite_round(layer, f, l, edge_f, edge_l, edge_mask,
+                                cfg.snap_links)
+    return f, l
+
+
+# ---------------------------------------------------------------- queries
+def predict_sldn(params, flow_h, n_links, cfg_vec):
+    """-> FCT slowdown (>= 1)."""
+    B = flow_h.shape[0]
+    x = jnp.concatenate(
+        [flow_h, n_links[:, None] / 8.0,
+         jnp.broadcast_to(cfg_vec, (B, cfg_vec.shape[-1]))], axis=-1)
+    return 1.0 + jax.nn.softplus(mlp(params["mlp_sldn"], x)[..., 0])
+
+
+def predict_size(params, flow_h):
+    """-> remaining fraction of flow size in [0, 1]."""
+    return jax.nn.sigmoid(mlp(params["mlp_size"], flow_h)[..., 0])
+
+
+def predict_queue(params, link_h):
+    """-> queue length, log1p(bytes/1KB) scale (>= 0)."""
+    return jax.nn.softplus(mlp(params["mlp_queue"], link_h)[..., 0])
+
+
+# ---------------------------------------------------------------- one event
+def temporal_update(params, cfg: M4Config, f_h, l_h, dt_f, dt_l,
+                    f_feat, l_feat, cfg_vec):
+    """GRU-1 / GRU-A temporal advance of snapshot states."""
+    Bf, Bl = f_h.shape[0], l_h.shape[0]
+    cf = jnp.broadcast_to(cfg_vec, (Bf, cfg_vec.shape[-1]))
+    cl = jnp.broadcast_to(cfg_vec, (Bl, cfg_vec.shape[-1]))
+    xin_f = jnp.concatenate([time_feat(dt_f)[:, None], f_feat, cf], -1)
+    xin_l = jnp.concatenate([time_feat(dt_l)[:, None], l_feat, cl], -1)
+    return gru_cell(params["gru1"], xin_f, f_h), gru_cell(params["gruA"], xin_l, l_h)
+
+
+def spatial_update(params, cfg: M4Config, f_h, l_h, edge_f, edge_l, edge_mask,
+                   cfg_vec):
+    """GNN + GRU-2/GRU-B state refresh."""
+    gf, gl = gnn_forward(params, cfg, f_h, l_h, edge_f, edge_l, edge_mask)
+    Bf, Bl = f_h.shape[0], l_h.shape[0]
+    cf = jnp.broadcast_to(cfg_vec, (Bf, cfg_vec.shape[-1]))
+    cl = jnp.broadcast_to(cfg_vec, (Bl, cfg_vec.shape[-1]))
+    f_new = gru_cell(params["gru2"], jnp.concatenate([gf, cf], -1), f_h)
+    l_new = gru_cell(params["gruB"], jnp.concatenate([gl, cl], -1), l_h)
+    return f_new, l_new

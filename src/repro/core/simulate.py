@@ -1,0 +1,270 @@
+"""m4 event-driven inference (§3.1, Figure 2/5).
+
+The event manager races the next arrival (from the traffic generator)
+against the earliest *predicted* departure (from querying MLP-sldn on the
+hidden states). Each event triggers: snapshot construction (in-JAX, static
+shapes) -> temporal GRU advance -> GNN spatial update -> departure-time
+re-prediction for affected flows.
+
+`simulate_open_loop` runs the whole trace as one `lax.scan` (2N events).
+`M4Simulator` exposes a single-event step for closed-loop applications that
+inject flows dynamically (§5.4).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..nn import mlp
+from .model import (M4Config, predict_size, predict_sldn, spatial_update,
+                    temporal_update)
+
+BIG = 1e30
+
+
+def _build_snapshot(cfg: M4Config, flow_links, fid, active_mask):
+    """Affected flows = active flows sharing >= 1 link with the event flow.
+    Returns (snap_f (SF,), snap_f_mask)."""
+    SF = cfg.snap_flows
+    ev_links = flow_links[fid]                               # (P,)
+    share = (flow_links[:, :, None] == ev_links[None, None, :]) \
+        & (flow_links[:, :, None] >= 0)
+    shares = share.any((1, 2))                               # (N,)
+    score = jnp.where(shares & active_mask, 1.0, 0.0).at[fid].set(-1.0)
+    # stable top-(SF-1) by score (ties -> lower index)
+    N = flow_links.shape[0]
+    key = score * N - jnp.arange(N)
+    k = min(SF - 1, N)
+    _, idx = jax.lax.top_k(key, k)
+    others_valid = score[idx] > 0
+    pad = SF - 1 - k
+    if pad:
+        idx = jnp.concatenate([idx, jnp.zeros((pad,), idx.dtype)])
+        others_valid = jnp.concatenate([others_valid, jnp.zeros((pad,), bool)])
+    # masked slots scatter to the dump row N, never aliasing a live row
+    idx = jnp.where(others_valid, idx, N)
+    snap_f = jnp.concatenate([fid[None], idx])
+    snap_mask = jnp.concatenate([jnp.ones((1,)), others_valid.astype(jnp.float32)])
+    return snap_f, snap_mask
+
+
+def _build_links(cfg: M4Config, flow_links, snap_f, snap_f_mask, num_links):
+    """Snapshot link set (deduped, padded) + edge list."""
+    SF, P, SL = cfg.snap_flows, cfg.max_path, cfg.snap_links
+    gl = flow_links[snap_f]                                  # (SF, P)
+    gl = jnp.where((gl >= 0) & (snap_f_mask[:, None] > 0), gl, num_links)
+    uniq = jnp.unique(gl.reshape(-1), size=SL, fill_value=num_links)
+    snap_l = uniq
+    snap_l_mask = (uniq < num_links).astype(jnp.float32)
+    el = jnp.searchsorted(uniq, gl.reshape(-1))
+    edge_mask = (gl.reshape(-1) < num_links).astype(jnp.float32)
+    el = jnp.where(edge_mask > 0, jnp.minimum(el, SL - 1), 0)
+    return snap_l, snap_l_mask, el, edge_mask
+
+
+def make_event_step(cfg: M4Config, static, num_links: int):
+    """static: dict of arena constant arrays (flow_links, flow_feat,
+    link_feat, ideal_fct, t_arrival, cfg_vec); num_links is static."""
+    SF, P = cfg.snap_flows, cfg.max_path
+    edge_f = jnp.repeat(jnp.arange(SF), P)
+
+    def event_step(params, state, t_ev, fid, is_arrival):
+        """Process one flow-level event; returns (state, sldn_pred, snap)."""
+        flow_links = static["flow_links"]
+        cfg_vec = static["cfg_vec"]
+        N = flow_links.shape[0]
+        active = (state["arrived"] & ~state["done"])[:N]
+        active = active.at[fid].set(True)  # arriving flow counts
+        snap_f, sfm = _build_snapshot(cfg, flow_links, fid, active)
+        fgather = jnp.minimum(snap_f, N - 1)   # clamped gathers (masked out)
+        snap_l, slm, edge_l, edge_mask = _build_links(
+            cfg, flow_links, fgather, sfm, num_links)
+        sl_safe = jnp.minimum(snap_l, num_links)  # dump row = num_links
+        lgather = jnp.minimum(snap_l, num_links - 1)
+
+        f_h = state["flow_h"][snap_f]
+        l_h = state["link_h"][sl_safe]
+        f_feat = static["flow_feat"][fgather]
+        l_feat = static["link_feat"][lgather]
+
+        # arrival: init slot-0 hidden state from static features (§3.2.1)
+        fin = jnp.concatenate([static["flow_feat"][fid], cfg_vec], -1)
+        h_new = jnp.tanh(mlp(params["flow_init"], fin))
+        f_h = f_h.at[0].set(jnp.where(is_arrival, h_new, f_h[0]))
+
+        dt_f = t_ev - state["flow_last"][snap_f]
+        dt_f = dt_f.at[0].set(jnp.where(is_arrival, 0.0, dt_f[0]))
+        dt_l = t_ev - state["link_last"][sl_safe]
+
+        f_h, l_h = temporal_update(params, cfg, f_h, l_h, dt_f, dt_l,
+                                   f_feat, l_feat, cfg_vec)
+        f_h2, l_h2 = spatial_update(params, cfg, f_h, l_h, edge_f, edge_l,
+                                    edge_mask, cfg_vec)
+        sldn = predict_sldn(params, f_h2, static["flow_feat"][fgather, 1] * 8.0,
+                            cfg_vec)
+
+        # scatter back
+        wf = sfm[:, None]
+        state["flow_h"] = state["flow_h"].at[snap_f].set(
+            wf * f_h2 + (1 - wf) * state["flow_h"][snap_f])
+        wl = (slm[:, None])
+        state["link_h"] = state["link_h"].at[sl_safe].set(
+            wl * l_h2 + (1 - wl) * state["link_h"][sl_safe])
+        state["flow_last"] = state["flow_last"].at[snap_f].set(
+            jnp.where(sfm > 0, t_ev, state["flow_last"][snap_f]))
+        state["link_last"] = state["link_last"].at[sl_safe].set(
+            jnp.where(slm > 0, t_ev, state["link_last"][sl_safe]))
+
+        # departure-time re-prediction for snapshot flows
+        t_dep_new = state["t_arr"][snap_f] + sldn * static["ideal_fct"][fgather]
+        t_dep_new = jnp.maximum(t_dep_new, t_ev + 1e-9)
+        cur = state["t_dep"][snap_f]
+        upd = jnp.where(sfm > 0, t_dep_new, cur)
+        state["t_dep"] = state["t_dep"].at[snap_f].set(upd)
+        return state, sldn, (snap_f, sfm)
+
+    return event_step
+
+
+def init_sim_state(params, cfg: M4Config, static, N, num_links: int):
+    """Arenas carry one extra 'dump' row (index N / num_links) that absorbs
+    scatters from masked snapshot slots."""
+    H = params["gru1"]["wh"].shape[0]
+    L = num_links
+    cfg_vec = static["cfg_vec"]
+    l_in = jnp.concatenate(
+        [static["link_feat"][:L],
+         jnp.broadcast_to(cfg_vec, (L, cfg_vec.shape[0]))], -1)
+    link_h = jnp.tanh(mlp(params["link_init"], l_in))
+    link_h = jnp.concatenate([link_h, jnp.zeros((1, H))], 0)
+    return dict(
+        flow_h=jnp.zeros((N + 1, H)),
+        link_h=link_h,
+        flow_last=jnp.zeros((N + 1,)), link_last=jnp.zeros((L + 1,)),
+        arrived=jnp.zeros((N + 1,), bool), done=jnp.zeros((N + 1,), bool),
+        t_dep=jnp.full((N + 1,), BIG), fct=jnp.zeros((N + 1,)),
+        t_arr=jnp.concatenate([jnp.asarray(static["t_arrival"]),
+                               jnp.zeros((1,))]))
+
+
+@partial(jax.jit, static_argnums=(1, 2))
+def _open_loop_scan(params, cfg: M4Config, num_links: int, static, arr_order,
+                    arr_times):
+    N = arr_times.shape[0]
+    step = make_event_step(cfg, static, num_links)
+    state = init_sim_state(params, cfg, static, N, num_links)
+
+    def body(carry, _):
+        state, ptr, t = carry
+        next_arr = jnp.where(ptr < N, arr_times[jnp.minimum(ptr, N - 1)], BIG)
+        dep_t = jnp.where(state["arrived"] & ~state["done"], state["t_dep"],
+                          BIG)[:N]
+        dep_i = jnp.argmin(dep_t)
+        next_dep = dep_t[dep_i]
+        is_arr = next_arr <= next_dep
+        t_ev = jnp.where(is_arr, next_arr, next_dep)
+        fid = jnp.where(is_arr, arr_order[jnp.minimum(ptr, N - 1)], dep_i)
+
+        state, _, _ = step(params, state, t_ev, fid, is_arr)
+        state["arrived"] = state["arrived"].at[fid].set(
+            state["arrived"][fid] | is_arr)
+        state["done"] = state["done"].at[fid].set(state["done"][fid] | ~is_arr)
+        state["fct"] = state["fct"].at[fid].set(
+            jnp.where(is_arr, state["fct"][fid],
+                      t_ev - state["t_arr"][fid]))
+        state["t_dep"] = state["t_dep"].at[fid].set(
+            jnp.where(is_arr, state["t_dep"][fid], BIG))
+        ptr = ptr + is_arr.astype(jnp.int32)
+        return (state, ptr, t_ev), None
+
+    (state, _, _), _ = jax.lax.scan(body, (state, jnp.int32(0), 0.0),
+                                    None, length=2 * N)
+    return state["fct"][:N], state["done"][:N]
+
+
+@dataclass
+class M4Result:
+    fcts: np.ndarray
+    slowdowns: np.ndarray
+    wallclock: float
+
+
+def make_static(topo, flows, net_config, cfg: M4Config):
+    N, P = len(flows), cfg.max_path
+    flow_links = np.full((N, P), -1, np.int32)
+    for f in flows:
+        flow_links[f.fid, :len(f.path)] = f.path[:P]
+    sizes = np.array([f.size for f in flows], np.float32)
+    nlinks = (flow_links >= 0).sum(1).astype(np.float32)
+    ideal = np.array([topo.ideal_fct(f.size, f.path) for f in flows], np.float32)
+    flow_feat = np.stack([np.log1p(sizes / 1e3) / 10.0, nlinks / 8.0,
+                          np.log1p(ideal / 1e-6) / 10.0], -1)
+    return {
+        "flow_links": jnp.asarray(flow_links),
+        "flow_feat": jnp.asarray(flow_feat, jnp.float32),
+        "link_feat": jnp.asarray(np.log1p(topo.capacity / 1e9)[:, None] / 10.0,
+                                 jnp.float32),
+        "ideal_fct": jnp.asarray(ideal),
+        "t_arrival": jnp.asarray([f.t_arrival for f in flows], jnp.float32),
+        "cfg_vec": jnp.asarray(net_config.feature_vec()),
+    }, topo.num_links, ideal
+
+
+def simulate_open_loop(params, cfg: M4Config, topo, net_config, flows) -> M4Result:
+    static, num_links, ideal = make_static(topo, flows, net_config, cfg)
+    order = np.argsort([f.t_arrival for f in flows], kind="stable").astype(np.int32)
+    times = np.array([flows[i].t_arrival for i in order], np.float32)
+    t0 = time.perf_counter()
+    fct, done = _open_loop_scan(params, cfg, num_links, static,
+                                jnp.asarray(order), jnp.asarray(times))
+    fct = np.asarray(jax.block_until_ready(fct))
+    wall = time.perf_counter() - t0
+    return M4Result(fcts=fct, slowdowns=fct / ideal, wallclock=wall)
+
+
+class M4Simulator:
+    """Single-event interface for closed-loop traffic generators (§5.4).
+
+    The driver calls `peek_next_departure()` / `advance_to_arrival(flow)` —
+    mirroring the paper's traffic-generator <-> backend protocol (Fig 5).
+    Flow arena is pre-sized; closed-loop apps pass their full flow backlog
+    and release arrivals dynamically.
+    """
+
+    def __init__(self, params, cfg: M4Config, topo, net_config, flows):
+        self.params, self.cfg = params, cfg
+        self.static, self.num_links, self.ideal = make_static(
+            topo, flows, net_config, cfg)
+        self.N = len(flows)
+        self.state = init_sim_state(params, cfg, self.static, self.N,
+                                    self.num_links)
+        self._step = jax.jit(make_event_step(cfg, self.static, self.num_links))
+        self.t = 0.0
+        self.fcts = np.full(self.N, np.nan)
+
+    def next_departure(self):
+        dep_t = np.asarray(jnp.where(
+            self.state["arrived"] & ~self.state["done"], self.state["t_dep"],
+            BIG))[:self.N]
+        i = int(dep_t.argmin())
+        return (None, None) if dep_t[i] >= BIG / 2 else (float(dep_t[i]), i)
+
+    def inject_arrival(self, fid: int, t: float):
+        self.t = t
+        self.state["t_arr"] = self.state["t_arr"].at[fid].set(t)
+        self.state, _, _ = self._step(self.params, self.state, jnp.float32(t),
+                                      jnp.int32(fid), jnp.bool_(True))
+        self.state["arrived"] = self.state["arrived"].at[fid].set(True)
+
+    def commit_departure(self, fid: int, t: float):
+        self.t = t
+        self.state, _, _ = self._step(self.params, self.state, jnp.float32(t),
+                                      jnp.int32(fid), jnp.bool_(False))
+        self.state["done"] = self.state["done"].at[fid].set(True)
+        self.state["t_dep"] = self.state["t_dep"].at[fid].set(BIG)
+        self.fcts[fid] = t - float(self.state["t_arr"][fid])

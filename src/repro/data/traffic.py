@@ -1,0 +1,142 @@
+"""Traffic/scenario generator — the paper's Table 2 parameter space.
+
+Synthetic flow-size distributions (Pareto/Exp/Gaussian/Lognormal with scale
+θ ∈ [5K, 50K]) for training; empirical Meta-style distributions
+(CacheFollower / WebServer / Hadoop, approximated piecewise CDFs from
+Roy et al. SIGCOMM'15) for test. Lognormal inter-arrivals with burstiness
+σ ∈ {1, 2}; rack-to-rack traffic matrices A/B/C; max-link-load targeting.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+import numpy as np
+
+from ..net.packetsim import Flow, NetConfig
+from ..net.topology import FatTree, paper_train_topo
+
+# ---------------------------------------------------------------- sizes
+SYNTH_DISTS = ["pareto", "exp", "gaussian", "lognormal"]
+# piecewise (bytes, cdf) approximations of the Meta workloads
+EMPIRICAL = {
+    # mostly medium/large flows (database)
+    "CacheFollower": ([500, 2e3, 10e3, 50e3, 200e3, 1e6], [0.1, 0.3, 0.55, 0.8, 0.95, 1.0]),
+    # dominated by small responses
+    "WebServer": ([300, 1e3, 3e3, 10e3, 50e3, 200e3], [0.35, 0.6, 0.8, 0.92, 0.99, 1.0]),
+    # bimodal: control msgs + large shuffles
+    "Hadoop": ([300, 1e3, 5e3, 30e3, 300e3, 2e6], [0.5, 0.65, 0.8, 0.9, 0.99, 1.0]),
+}
+
+
+def sample_sizes(rng, dist: str, n: int, theta: float = 20e3) -> np.ndarray:
+    if dist == "pareto":
+        s = (rng.pareto(1.3, n) + 1) * theta * 0.3
+    elif dist == "exp":
+        s = rng.exponential(theta, n)
+    elif dist == "gaussian":
+        s = rng.normal(theta, theta / 3, n)
+    elif dist == "lognormal":
+        s = rng.lognormal(np.log(theta), 0.8, n)
+    elif dist in EMPIRICAL:
+        pts, cdf = EMPIRICAL[dist]
+        u = rng.random(n)
+        logp = np.log(np.array([pts[0] / 3] + list(pts)))
+        cdfp = np.array([0.0] + list(cdf))
+        s = np.exp(np.interp(u, cdfp, logp))
+    else:
+        raise ValueError(dist)
+    return np.clip(s, 200, 5e6).astype(np.int64)
+
+
+def traffic_matrix(rng, kind: str, num_racks: int) -> np.ndarray:
+    """Rack-to-rack probability matrix. A=database (uniform-ish),
+    B=web (skewed hot racks), C=hadoop (rack-local heavy)."""
+    if kind == "A":
+        m = np.ones((num_racks, num_racks)) + 0.3 * rng.random((num_racks, num_racks))
+    elif kind == "B":
+        hot = rng.random(num_racks) ** 3
+        m = np.outer(hot + 0.1, np.ones(num_racks)) + 0.2
+    elif kind == "C":
+        m = 0.3 * np.ones((num_racks, num_racks)) + 3.0 * np.eye(num_racks)
+    else:
+        raise ValueError(kind)
+    np.fill_diagonal(m, m.diagonal() * 0.5)  # keep some intra-rack
+    return m / m.sum()
+
+
+@dataclass
+class Scenario:
+    """One sampled point of the Table-2 space."""
+    topo: FatTree
+    config: NetConfig
+    size_dist: str = "lognormal"
+    theta: float = 20e3
+    sigma: float = 1.0            # burstiness
+    max_load: float = 0.5
+    matrix: str = "A"
+    num_flows: int = 2000
+    seed: int = 0
+
+    def generate(self) -> List[Flow]:
+        rng = np.random.default_rng(self.seed)
+        topo = self.topo
+        sizes = sample_sizes(rng, self.size_dist, self.num_flows, self.theta)
+        tm = traffic_matrix(rng, self.matrix, topo.num_racks)
+        pairs = rng.choice(topo.num_racks ** 2, size=self.num_flows,
+                           p=tm.reshape(-1))
+        src_r, dst_r = pairs // topo.num_racks, pairs % topo.num_racks
+        src = src_r * topo.hosts_per_rack + rng.integers(
+            0, topo.hosts_per_rack, self.num_flows)
+        dst = dst_r * topo.hosts_per_rack + rng.integers(
+            0, topo.hosts_per_rack, self.num_flows)
+        same = src == dst
+        dst[same] = (dst[same] + 1) % topo.num_hosts
+
+        # target the max link load: estimate the busiest link's bytes/sec at
+        # unit arrival rate, then scale the mean inter-arrival accordingly.
+        paths = [topo.path(int(s), int(d), i) for i, (s, d) in enumerate(zip(src, dst))]
+        per_link = np.zeros(topo.num_links)
+        for p, sz in zip(paths, sizes):
+            for l in p:
+                per_link[l] += sz * 8.0
+        busiest = per_link.max() / self.num_flows  # bits per flow on hottest link
+        mean_gap = busiest / (self.max_load * topo.capacity.max())
+        gaps = rng.lognormal(np.log(max(mean_gap, 1e-9)) - self.sigma ** 2 / 2,
+                             self.sigma, self.num_flows)
+        t_arr = np.cumsum(gaps)
+        t_arr -= t_arr[0]
+
+        return [Flow(fid=i, src=int(src[i]), dst=int(dst[i]),
+                     size=int(sizes[i]), t_arrival=float(t_arr[i]),
+                     path=paths[i])
+                for i in range(self.num_flows)]
+
+
+def sample_scenario(seed: int, *, num_flows: int = 2000,
+                    synthetic: bool = True,
+                    topo: Optional[FatTree] = None) -> Scenario:
+    """Random point of Table 2. synthetic=True -> training distributions."""
+    rng = np.random.default_rng(seed)
+    oversub = rng.choice(["1-to-1", "2-to-1", "4-to-1"])
+    topo = topo or paper_train_topo(str(oversub))
+    cc = str(rng.choice(["dctcp", "dcqcn", "timely"]))
+    config = NetConfig(
+        cc=cc,
+        init_window=float(rng.uniform(5e3, 15e3)),
+        buffer_bytes=float(rng.uniform(100e3, 160e3)),
+        dctcp_k=float(rng.uniform(10e3, 30e3)),
+        dcqcn_kmin=float(rng.uniform(10e3, 30e3)),
+        dcqcn_kmax=float(rng.uniform(30e3, 50e3)),
+        timely_tlow=float(rng.uniform(40e-6, 60e-6)),
+        timely_thigh=float(rng.uniform(100e-6, 150e-6)),
+    )
+    dist = str(rng.choice(SYNTH_DISTS)) if synthetic else \
+        str(rng.choice(list(EMPIRICAL.keys())))
+    return Scenario(
+        topo=topo, config=config, size_dist=dist,
+        theta=float(rng.uniform(5e3, 50e3)),
+        sigma=float(rng.choice([1.0, 2.0])),
+        max_load=float(rng.uniform(0.3, 0.8)),
+        matrix=str(rng.choice(["A", "B", "C"])),
+        num_flows=num_flows, seed=seed)

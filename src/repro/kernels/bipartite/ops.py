@@ -1,0 +1,49 @@
+"""jit'd wrapper: padding to MXU-aligned shapes + multi-round driver used by
+`repro.core.model.gnn_forward` when M4Config.use_pallas is set."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernel import bipartite_round_pallas
+from .ref import incidence_from_edges
+
+
+def _pad_to(x, mult, axis):
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def bipartite_round(f_emb, l_emb, edge_f, edge_l, edge_mask, wf, wl, bf, bl,
+                    *, interpret=True):
+    """Drop-in replacement for ref.bipartite_round_ref via the Pallas kernel."""
+    SF, G = f_emb.shape
+    SL = l_emb.shape[0]
+    m = incidence_from_edges(edge_f, edge_l, edge_mask, SF, SL)
+    Gp = G + ((-G) % 128)
+    fp = _pad_to(f_emb, 128, 1)
+    lp = _pad_to(l_emb, 128, 1)
+    # weights: (2G, G) -> (2Gp, Gp), keeping [self; agg] halves aligned
+    wfp = jnp.zeros((2 * Gp, Gp), wf.dtype)
+    wfp = wfp.at[:G, :G].set(wf[:G]).at[Gp:Gp + G, :G].set(wf[G:])
+    wlp = jnp.zeros((2 * Gp, Gp), wl.dtype)
+    wlp = wlp.at[:G, :G].set(wl[:G]).at[Gp:Gp + G, :G].set(wl[G:])
+    bfp = _pad_to(bf, 128, 0)
+    blp = _pad_to(bl, 128, 0)
+    fo, lo = bipartite_round_pallas(fp, lp, m, wfp, wlp, bfp, blp,
+                                    interpret=interpret)
+    return fo[:, :G], lo[:, :G]
+
+
+def bipartite_rounds(gnn_layers, f, l, edge_f, edge_l, edge_mask, *,
+                     interpret=True):
+    """Multi-round GNN used by m4's spatial model."""
+    for layer in gnn_layers:
+        f, l = bipartite_round(
+            f, l, edge_f, edge_l, edge_mask,
+            layer["wf"]["w"], layer["wl"]["w"],
+            layer["wf"]["b"], layer["wl"]["b"], interpret=interpret)
+    return f, l

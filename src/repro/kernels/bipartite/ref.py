@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the bipartite GraphSAGE round (segment-sum form —
+identical math to `repro.core.model._bipartite_round`)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def incidence_from_edges(edge_f, edge_l, edge_mask, SF, SL):
+    """Edge list -> dense 0/1 incidence matrix (SF, SL)."""
+    m = jnp.zeros((SF, SL))
+    return m.at[edge_f, edge_l].add(edge_mask)
+
+
+def bipartite_round_ref(f_emb, l_emb, edge_f, edge_l, edge_mask, wf, wl, bf, bl):
+    """Segment-sum GraphSAGE round. wf/wl: (2G, G); bf/bl: (G,)."""
+    SL = l_emb.shape[0]
+    ef = f_emb[edge_f] * edge_mask[:, None]
+    agg_l = jax.ops.segment_sum(ef, edge_l, num_segments=SL)
+    el = l_emb[edge_l] * edge_mask[:, None]
+    agg_f = jax.ops.segment_sum(el, edge_f, num_segments=f_emb.shape[0])
+    G = f_emb.shape[1]
+    f_new = jax.nn.relu(jnp.concatenate([f_emb, agg_f], -1) @ wf + bf)
+    l_new = jax.nn.relu(jnp.concatenate([l_emb, agg_l], -1) @ wl + bl)
+    return f_new, l_new

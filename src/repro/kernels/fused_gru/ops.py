@@ -1,0 +1,33 @@
+"""jit'd wrapper: pads (B, Din, H) to MXU-aligned shapes, calls the kernel,
+slices back. Gate-order-preserving padding of the 3H axis."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernel import gru_cell_pallas
+
+
+def _pad_gates(w, H, Hp):
+    """(D, 3H) -> (Dp?, 3Hp), keeping the r/z/n thirds aligned."""
+    D = w.shape[0]
+    out = jnp.zeros((D, 3 * Hp), w.dtype)
+    for g in range(3):
+        out = out.at[:, g * Hp:g * Hp + H].set(w[:, g * H:(g + 1) * H])
+    return out
+
+
+def gru_cell(x, h, wi, wh, bi, bh, *, tile_b=128, interpret=True):
+    B, Din = x.shape
+    H = h.shape[1]
+    Bp = B + ((-B) % tile_b)
+    Dp = Din + ((-Din) % 128)
+    Hp = H + ((-H) % 128)
+    xp = jnp.zeros((Bp, Dp), x.dtype).at[:B, :Din].set(x)
+    hp = jnp.zeros((Bp, Hp), h.dtype).at[:B, :H].set(h)
+    wip = jnp.zeros((Dp, 3 * Hp), wi.dtype).at[:Din].set(_pad_gates(wi, H, Hp))
+    whp = jnp.zeros((Hp, 3 * Hp), wh.dtype).at[:H].set(_pad_gates(wh, H, Hp))
+    bip = _pad_gates(bi[None], H, Hp)[0]
+    bhp = _pad_gates(bh[None], H, Hp)[0]
+    out = gru_cell_pallas(xp, hp, wip, whp, bip, bhp, tile_b=tile_b,
+                          interpret=interpret)
+    return out[:B, :H]

@@ -1,0 +1,8 @@
+"""Pure-jnp oracle: identical math to `repro.nn.layers.gru_cell`."""
+from __future__ import annotations
+
+from ...nn.layers import gru_cell
+
+
+def gru_cell_ref(x, h, wi, wh, bi, bh):
+    return gru_cell({"wi": wi, "wh": wh, "bi": bi, "bh": bh}, x, h)

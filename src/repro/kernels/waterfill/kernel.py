@@ -1,0 +1,45 @@
+"""Pallas TPU kernel: masked row-min for max-min water-filling.
+
+One water-filling round needs, per flow f, its bottleneck fair share
+    f_share[f] = min_{l in path(f)} share[l]
+over the dense 0/1 incidence matrix A (F, L). This masked row-reduction is
+the O(F·L) inner loop of flowSim's rate allocation; the counting matmuls
+(n_l, used_l) already map to the MXU via XLA. Grid tiles flows; each
+program holds an (TF, L) incidence tile + the share row in VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INF = 3.4e38  # plain float: jnp constants would be captured by the tracer
+
+
+def _rowmin_kernel(a_ref, share_ref, o_ref):
+    a = a_ref[...]                       # (TF, L)
+    s = share_ref[...]                   # (1, L)
+    masked = jnp.where(a > 0, s, jnp.full_like(s, INF))
+    o_ref[...] = jnp.min(masked, axis=1, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_f", "interpret"))
+def masked_rowmin_pallas(a, share, *, tile_f: int = 128, interpret: bool = True):
+    """a: (F, L) 0/1 incidence; share: (L,). Returns (F,) row mins.
+    F must be a multiple of tile_f (ops.py pads)."""
+    F, L = a.shape
+    assert F % tile_f == 0, (F, tile_f)
+    out = pl.pallas_call(
+        _rowmin_kernel,
+        grid=(F // tile_f,),
+        in_specs=[
+            pl.BlockSpec((tile_f, L), lambda i: (i, 0)),
+            pl.BlockSpec((1, L), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_f, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((F, 1), jnp.float32),
+        interpret=interpret,
+    )(a, share[None])
+    return out[:, 0]

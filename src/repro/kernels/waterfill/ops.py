@@ -1,0 +1,35 @@
+"""jit'd wrapper: padded Pallas masked row-min + the TPU water-filling loop.
+`waterfill_tpu` is the batched flow-rate allocator used by the fast
+flow-level backend (beyond-paper: a TPU-resident flowSim)."""
+from __future__ import annotations
+
+import functools
+
+import jax.numpy as jnp
+
+from .kernel import masked_rowmin_pallas
+from .ref import waterfill_jnp
+
+
+def masked_rowmin(a, share, *, interpret=True):
+    F, L = a.shape
+    Fp = F + ((-F) % 128)
+    if Fp != F:
+        a = jnp.concatenate([a, jnp.zeros((Fp - F, L), a.dtype)], 0)
+    out = masked_rowmin_pallas(a, share, interpret=interpret)
+    return out[:F]
+
+
+def waterfill_tpu(a, cap, *, max_rounds=64, interpret=True):
+    rowmin = functools.partial(masked_rowmin, interpret=interpret)
+    return waterfill_jnp(a, cap, max_rounds=max_rounds, rowmin=rowmin)
+
+
+def incidence(paths, num_links, max_path=8):
+    """Host helper: list of link-id arrays -> dense (F, L) incidence."""
+    import numpy as np
+    F = len(paths)
+    a = np.zeros((F, num_links), np.float32)
+    for i, p in enumerate(paths):
+        a[i, np.asarray(p, np.int64)] = 1.0
+    return jnp.asarray(a)

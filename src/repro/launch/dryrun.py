@@ -1,0 +1,280 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# ^ MUST precede any jax import: jax locks the device count at first init.
+"""Multi-pod dry-run: prove the distribution config is coherent.
+
+For every (architecture x input-shape x mesh) cell:
+  jax.jit(step, in_shardings=...).lower(**input_specs).compile()
+then record memory_analysis(), cost_analysis(), and the collective-op byte
+census parsed from the compiled HLO. No arrays are ever allocated
+(ShapeDtypeStruct stand-ins).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma2-9b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod both]
+Results append to results/dryrun/<arch>_<shape>_<mesh>.json.
+"""
+import argparse
+import json
+import re
+import time
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from .. import configs
+from ..models import lm
+from ..optim import adamw_init, adamw_update, clip_by_global_norm
+from .mesh import make_production_mesh
+from .sharding import batch_spec, data_axes, decode_state_spec, param_spec
+
+# `%x = <result-type> <opcode>(...)` — opcode position, not operand refs
+COLLECTIVE_OP_RE = re.compile(
+    r"=\s*(\([^)]*\)|[a-z0-9]+\[[\d,]*\]\S*)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?[.\d]*\(")
+TYPE_RE = re.compile(r"\b(f32|bf16|f16|s32|u32|s8|u8|pred|f64|s64)\[([\d,]*)\]")
+DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1,
+               "u8": 1, "pred": 1, "f64": 8, "s64": 8}
+
+
+def _type_bytes(type_str: str):
+    tm = TYPE_RE.search(type_str)
+    if not tm:
+        return 0
+    n = 1
+    for d in tm.group(2).split(","):
+        if d:
+            n *= int(d)
+    return n * DTYPE_BYTES[tm.group(1)]
+
+
+def collective_bytes(hlo_text: str, top_k: int = 0):
+    """Sum result sizes of every collective op in the compiled HLO.
+
+    Result-size is a uniform per-device proxy for bytes moved (all-reduce:
+    = operand size; all-gather: full gathered output; all-to-all: shuffled
+    block). Async -start/-done pairs are counted once. Returns
+    (total_bytes, per-kind dict, op count[, top-k (bytes, line) list]).
+    """
+    per_kind, total, count, tops = {}, 0, 0, []
+    for line in hlo_text.splitlines():
+        m = COLLECTIVE_OP_RE.search(line)
+        if not m:
+            continue
+        kind = m.group(2)
+        b = _type_bytes(m.group(1))
+        per_kind[kind] = per_kind.get(kind, 0) + b
+        total += b
+        count += 1
+        if top_k:
+            tops.append((b, line.strip()[:220]))
+    if top_k:
+        tops.sort(key=lambda x: -x[0])
+        return total, per_kind, count, tops[:top_k]
+    return total, per_kind, count
+
+
+def named(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def make_steps(cfg):
+    def train_step(params, opt, batch):
+        (loss, _), grads = jax.value_and_grad(
+            lm.loss_fn, has_aux=True)(params, cfg, batch)
+        grads, gn = clip_by_global_norm(grads, 1.0)
+        params, opt = adamw_update(params, grads, opt, lr=3e-4,
+                                   weight_decay=0.1)
+        return params, opt, loss
+
+    def prefill(params, batch):
+        return lm.prefill_step(params, cfg, batch)
+
+    def serve(params, state, batch):
+        return lm.serve_step(params, cfg, state, batch)
+
+    return train_step, prefill, serve
+
+
+def abstract_params(cfg):
+    return jax.eval_shape(lambda: lm.init_params(jax.random.PRNGKey(0), cfg))
+
+
+def lower_cell(arch: str, shape: str, multi_pod: bool, verbose=True):
+    cfg = configs.get_config(arch)
+    if not configs.shape_applicable(cfg, shape):
+        return {"arch": arch, "shape": shape, "skipped":
+                "long_500k needs sub-quadratic attention (DESIGN.md §4)"}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    S, B, kind = configs.SHAPES[shape]
+    kindname, specs = configs.input_specs(cfg, shape)
+    train_step, prefill, serve = make_steps(cfg)
+
+    params_abs = abstract_params(cfg)
+    p_sh = named(mesh, jax.tree_util.tree_map_with_path(param_spec, params_abs))
+    batch_abs = specs["batch"]
+    b_sh = named(mesh, batch_spec(batch_abs, mesh, B))
+
+    t0 = time.perf_counter()
+    with mesh:
+        if kind == "train":
+            opt_abs = jax.eval_shape(adamw_init, params_abs)
+            o_sh = named(mesh, jax.tree_util.tree_map_with_path(
+                lambda pth, lf: param_spec(pth[1:], lf) if lf.ndim else P(),
+                opt_abs))
+            fn = jax.jit(train_step, in_shardings=(p_sh, o_sh, b_sh),
+                         donate_argnums=(0, 1))
+            lowered = fn.lower(params_abs, opt_abs, batch_abs)
+        elif kind == "prefill":
+            fn = jax.jit(prefill, in_shardings=(p_sh, b_sh))
+            lowered = fn.lower(params_abs, batch_abs)
+        else:
+            state_abs = specs["state"]
+            s_sh = named(mesh, decode_state_spec(state_abs, mesh, cfg, B))
+            fn = jax.jit(serve, in_shardings=(p_sh, s_sh, b_sh),
+                         donate_argnums=(1,))
+            lowered = fn.lower(params_abs, state_abs, batch_abs)
+        t_lower = time.perf_counter() - t0
+        compiled = lowered.compile()
+        t_compile = time.perf_counter() - t0 - t_lower
+
+    cost = compiled.cost_analysis() or {}
+    try:
+        mem = compiled.memory_analysis()
+        mem_info = {
+            "bytes_per_device": getattr(mem, "temp_size_in_bytes", None),
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+        }
+    except Exception as e:  # CPU backend may not implement it
+        mem_info = {"error": str(e)}
+    hlo = compiled.as_text()
+    coll_total, coll_kinds, coll_n = collective_bytes(hlo)
+
+    rec = {
+        "arch": arch, "shape": shape,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "kind": kind, "seq": S, "batch": B,
+        "devices": int(mesh.size),
+        "flops": cost.get("flops"),
+        "bytes_accessed": cost.get("bytes accessed"),
+        "collective_bytes": coll_total,
+        "collective_ops": coll_n,
+        "collective_kinds": coll_kinds,
+        "memory": mem_info,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "hlo_len": len(hlo),
+    }
+    if verbose:
+        print(json.dumps(rec, indent=1, default=str))
+    return rec
+
+
+def opt_overrides(cfg, shape):
+    """Beyond-paper perf knobs (§Perf): Ulysses attention resharding over
+    whichever mesh axes divide the batch + bf16 comm barriers."""
+    S, B, kind = configs.SHAPES[shape]
+    kw = dict(comm_barriers=True)
+    # MEASURED (§Perf): batch-sharded attention pays for wide dense archs;
+    # for MoE (small d_model, huge vocab) the induced FSDP-style f32 weight
+    # gathers cost more than the TP activation ARs they replace -> skip.
+    if kind in ("train", "prefill") and cfg.family == "dense":
+        axes, rem = [], B
+        if rem % 16 == 0:
+            axes.append("data"); rem //= 16
+        if rem % 16 == 0:
+            axes.append("model"); rem //= 16
+        if axes:
+            kw["attn_batch_axes"] = tuple(axes)
+    return cfg.with_(**kw)
+
+
+def diagnose(arch, shape, top=20, optimized=False):
+    """Print the top collective ops of a cell's compiled HLO (perf loop)."""
+    cfg = configs.get_config(arch)
+    if optimized:
+        cfg = opt_overrides(cfg, shape)
+    mesh = make_production_mesh(multi_pod=False)
+    S, B, kind = configs.SHAPES[shape]
+    _, specs = configs.input_specs(cfg, shape)
+    train_step, prefill, serve = make_steps(cfg)
+    params_abs = abstract_params(cfg)
+    p_sh = named(mesh, jax.tree_util.tree_map_with_path(param_spec, params_abs))
+    b_sh = named(mesh, batch_spec(specs["batch"], mesh, B))
+    from jax.sharding import PartitionSpec as P
+    from ..optim import adamw_init
+    with mesh:
+        if kind == "train":
+            opt_abs = jax.eval_shape(adamw_init, params_abs)
+            o_sh = named(mesh, jax.tree_util.tree_map_with_path(
+                lambda pth, lf: param_spec(pth[1:], lf) if lf.ndim else P(),
+                opt_abs))
+            compiled = jax.jit(train_step, in_shardings=(p_sh, o_sh, b_sh),
+                               donate_argnums=(0, 1)).lower(
+                params_abs, opt_abs, specs["batch"]).compile()
+        elif kind == "prefill":
+            compiled = jax.jit(prefill, in_shardings=(p_sh, b_sh)).lower(
+                params_abs, specs["batch"]).compile()
+        else:
+            state_abs = specs["state"]
+            s_sh = named(mesh, decode_state_spec(state_abs, mesh, cfg, B))
+            compiled = jax.jit(serve, in_shardings=(p_sh, s_sh, b_sh),
+                               donate_argnums=(1,)).lower(
+                params_abs, state_abs, specs["batch"]).compile()
+    total, kinds, n, tops = collective_bytes(compiled.as_text(), top_k=top)
+    print(f"== {arch} {shape}: {n} collectives, {total/1e9:.2f} GB "
+          f"(per-device result bytes, loop bodies once) ==")
+    for k, v in sorted(kinds.items(), key=lambda kv: -kv[1]):
+        print(f"  {k:20s} {v/1e9:8.3f} GB")
+    for b, line in tops:
+        print(f"  {b/1e6:10.1f} MB | {line[:180]}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", choices=["no", "yes", "both"], default="no")
+    ap.add_argument("--diagnose", action="store_true",
+                    help="print top collective ops for one cell")
+    ap.add_argument("--optimized", action="store_true",
+                    help="apply beyond-paper perf knobs (§Perf)")
+    ap.add_argument("--out", default="results/dryrun")
+    args = ap.parse_args()
+    if args.diagnose:
+        diagnose(args.arch, args.shape, optimized=args.optimized)
+        return
+
+    archs = configs.list_archs() if (args.all or not args.arch) else [args.arch]
+    shapes = list(configs.SHAPES) if (args.all or not args.shape) else [args.shape]
+    pods = {"no": [False], "yes": [True], "both": [False, True]}[args.multi_pod]
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in pods:
+                tag = f"{arch}_{shape}_{'2x16x16' if mp else '16x16'}"
+                try:
+                    rec = lower_cell(arch, shape, mp)
+                    with open(os.path.join(args.out, tag + ".json"), "w") as f:
+                        json.dump(rec, f, indent=1, default=str)
+                    status = "SKIP" if "skipped" in rec else "OK"
+                    print(f"[dryrun] {tag}: {status}")
+                except Exception as e:
+                    failures.append((tag, str(e)[:200]))
+                    print(f"[dryrun] {tag}: FAIL {e}")
+    if failures:
+        raise SystemExit(f"{len(failures)} dry-run failures: {failures}")
+
+
+if __name__ == "__main__":
+    main()

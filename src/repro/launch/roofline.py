@@ -1,0 +1,183 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+# ^ must precede jax init (see dryrun.py)
+"""Roofline analysis (§Roofline of EXPERIMENTS.md).
+
+XLA's cost_analysis() counts `while`-loop (lax.scan) bodies ONCE, so raw
+dry-run numbers undercount per-layer work. Correction: lower the same cell
+UNROLLED at two small depths L1 < L2 with identical sharding; the
+difference is the exact per-layer (flops, bytes, collective) contribution:
+
+    per_layer = (X(L2) - X(L1)) / (L2 - L1)
+    base      = X(L1) - L1 * per_layer          # embed/head/loss/optimizer
+    total     = base + L_full * per_layer
+
+Hardware model (TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+
+    compute   = HLO_FLOPs_dev / peak
+    memory    = HLO_bytes_dev / hbm_bw
+    collective= collective_bytes_dev / link_bw
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.roofline --arch gemma2-9b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.roofline --all
+"""
+import argparse
+import json
+import time
+from dataclasses import dataclass
+
+import jax
+
+from .. import configs
+from .dryrun import (abstract_params, collective_bytes, lower_cell, named)
+from .mesh import make_production_mesh
+from .sharding import batch_spec, decode_state_spec, param_spec
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+CHIPS = 256
+
+
+def _depths(cfg):
+    if cfg.family == "hybrid":
+        e = cfg.hybrid_attn_every
+        return e, 2 * e
+    if cfg.local_global:
+        return 2, 4
+    return 1, 2
+
+
+def _lower_unrolled(cfg, shape, depth):
+    """Lower with `depth` unrolled layers (see module docstring)."""
+    """Lower the cell with `depth` unrolled layers; return (flops, bytes,
+    coll_bytes) per device."""
+    from ..models import lm
+    from ..optim import adamw_init, adamw_update, clip_by_global_norm
+
+    cfg = cfg.with_(num_layers=depth)
+    mesh = make_production_mesh(multi_pod=False)
+    S, B, kind = configs.SHAPES[shape]
+    _, specs = configs.input_specs(cfg, shape)
+    params_abs = abstract_params(cfg)
+    p_sh = named(mesh, jax.tree_util.tree_map_with_path(param_spec, params_abs))
+    b_sh = named(mesh, batch_spec(specs["batch"], mesh, B))
+
+    with mesh:
+        if kind == "train":
+            def step(params, opt, batch):
+                (loss, _), grads = jax.value_and_grad(
+                    lambda p, b: lm.loss_fn(p, cfg, b, unroll=True),
+                    has_aux=True)(params, batch)
+                grads, _ = clip_by_global_norm(grads, 1.0)
+                params, opt = adamw_update(params, grads, opt, lr=3e-4)
+                return params, opt, loss
+            opt_abs = jax.eval_shape(adamw_init, params_abs)
+            from jax.sharding import PartitionSpec as P
+            o_sh = named(mesh, jax.tree_util.tree_map_with_path(
+                lambda pth, lf: param_spec(pth[1:], lf) if lf.ndim else P(),
+                opt_abs))
+            lowered = jax.jit(step, in_shardings=(p_sh, o_sh, b_sh)).lower(
+                params_abs, opt_abs, specs["batch"])
+        elif kind == "prefill":
+            lowered = jax.jit(
+                lambda p, b: lm.prefill_step(p, cfg, b, unroll=True),
+                in_shardings=(p_sh, b_sh)).lower(params_abs, specs["batch"])
+        else:
+            state_abs = specs["state"]
+            s_sh = named(mesh, decode_state_spec(state_abs, mesh, cfg, B))
+            lowered = jax.jit(
+                lambda p, s, b: lm.serve_step(p, cfg, s, b, unroll=True),
+                in_shardings=(p_sh, s_sh, b_sh)).lower(
+                    params_abs, state_abs, specs["batch"])
+        compiled = lowered.compile()
+    cost = compiled.cost_analysis() or {}
+    coll, _, _ = collective_bytes(compiled.as_text())
+    return (cost.get("flops", 0.0), cost.get("bytes accessed", 0.0), coll)
+
+
+def model_flops(cfg, shape):
+    """MODEL_FLOPS convention: 6·N_active·tokens (train), 2·N_active·tokens
+    (prefill/decode forward-only)."""
+    S, B, kind = configs.SHAPES[shape]
+    n = cfg.active_param_count()
+    if kind == "train":
+        return 6.0 * n * S * B
+    if kind == "prefill":
+        return 2.0 * n * S * B
+    return 2.0 * n * B  # decode: one token per sequence
+
+
+def analyze_cell(arch, shape, dry_dir="results/dryrun", log=print,
+                 optimized=False):
+    cfg = configs.get_config(arch)
+    if not configs.shape_applicable(cfg, shape):
+        return {"arch": arch, "shape": shape, "skipped": True}
+    if optimized:
+        from .dryrun import opt_overrides
+        cfg = opt_overrides(cfg, shape)
+    l1, l2 = _depths(cfg)
+    t0 = time.perf_counter()
+    f1, b1, c1 = _lower_unrolled(cfg, shape, l1)
+    f2, b2, c2 = _lower_unrolled(cfg, shape, l2)
+    dl = l2 - l1
+    per_layer = ((f2 - f1) / dl, (b2 - b1) / dl, (c2 - c1) / dl)
+    base = (f1 - l1 * per_layer[0], b1 - l1 * per_layer[1],
+            c1 - l1 * per_layer[2])
+    L = cfg.num_layers
+    tot_f = max(base[0] + L * per_layer[0], 0.0)
+    tot_b = max(base[1] + L * per_layer[1], 0.0)
+    tot_c = max(base[2] + L * per_layer[2], 0.0)
+
+    t_comp = tot_f / PEAK_FLOPS
+    t_mem = tot_b / HBM_BW
+    t_coll = tot_c / ICI_BW
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape)
+    hlo_global = tot_f * CHIPS
+    useful = mf / (CHIPS * PEAK_FLOPS)
+    rec = {
+        "arch": arch, "shape": shape, "mesh": "16x16",
+        "optimized": optimized,
+        "depths_probed": [l1, l2],
+        "flops_dev": tot_f, "bytes_dev": tot_b, "coll_bytes_dev": tot_c,
+        "t_compute_s": t_comp, "t_memory_s": t_mem, "t_collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops": mf,
+        "useful_ratio": mf / hlo_global if hlo_global else None,
+        "roofline_fraction": useful / max(max(terms.values()), 1e-30),
+        "analysis_s": round(time.perf_counter() - t0, 1),
+    }
+    log(json.dumps(rec, indent=1))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--optimized", action="store_true")
+    ap.add_argument("--out", default="results/roofline")
+    args = ap.parse_args()
+    archs = configs.list_archs() if (args.all or not args.arch) else [args.arch]
+    shapes = list(configs.SHAPES) if (args.all or not args.shape) else [args.shape]
+    os.makedirs(args.out, exist_ok=True)
+    for arch in archs:
+        for shape in shapes:
+            tag = f"{arch}_{shape}" + ("_opt" if args.optimized else "")
+            try:
+                rec = analyze_cell(arch, shape, optimized=args.optimized)
+                with open(os.path.join(args.out, tag + ".json"), "w") as f:
+                    json.dump(rec, f, indent=1)
+                print(f"[roofline] {tag}: "
+                      f"{'SKIP' if rec.get('skipped') else rec['dominant']}")
+            except Exception as e:
+                print(f"[roofline] {tag}: FAIL {e}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,124 @@
+"""Sharding rules: DP across (pod, data), TP/EP/SP across model.
+
+Rules are expressed on the *trailing* dimensions of each parameter and
+left-padded with None, so the same table covers plain layers, per-layer
+stacked leaves (L, ...), and zamba2's doubly-stacked (G, E, ...) leaves.
+
+TP:  attention qkv/ffn-in column-sharded, o/ffn-out row-sharded,
+     vocab (embed table + lm head) sharded on model.
+EP:  MoE expert tensors (E, D, F) sharded on the expert axis.
+SP:  decode KV caches sequence-sharded on model (GQA kv-head counts are
+     below the model-axis size, so sequence is the shardable axis);
+     SSM decode states shard their head axis.
+DP:  batch across (pod, data) when divisible (long_500k has B=1 ->
+     replicated, the model axis still splits the work).
+"""
+from __future__ import annotations
+
+from jax.sharding import PartitionSpec as P
+
+
+def _trail(leaf_ndim, *spec):
+    return P(*([None] * (leaf_ndim - len(spec)) + list(spec)))
+
+
+def param_spec(path, leaf):
+    """path: tuple of pytree keys (jax.tree_util names), leaf: abstract array."""
+    keys = [str(getattr(k, "key", getattr(k, "idx", k))) for k in path]
+    nd = leaf.ndim
+    joined = "/".join(keys)
+
+    if "embed" in keys and keys[-1] == "table":
+        return _trail(nd, "model", None)
+    if "lm_head" in keys and keys[-1] == "w":
+        return _trail(nd, None, "model")
+    # llama4-style shared expert: dense GLU rules (check BEFORE expert rule)
+    if "shared" in keys and keys[-1] in ("wg", "wu"):
+        return _trail(nd, None, "model")
+    if "shared" in keys and keys[-1] == "wd":
+        return _trail(nd, "model", None)
+    # MoE experts: (..., E, D, F) / (..., E, F, D) -> shard E
+    if "moe" in keys and keys[-1] in ("wg", "wu", "wd"):
+        return _trail(nd, "model", None, None)
+    # attention projections
+    if keys[-1] == "w" and len(keys) >= 2:
+        parent = keys[-2]
+        if parent in ("q", "k", "v"):
+            return _trail(nd, None, "model")
+        if parent == "o":
+            return _trail(nd, "model", None)
+        if parent == "in_proj":      # mamba2
+            return _trail(nd, None, "model")
+        if parent == "out_proj":
+            return _trail(nd, "model", None)
+    # dense GLU ffn
+    if "ffn" in keys and keys[-1] in ("wg", "wu"):
+        return _trail(nd, None, "model")
+    if "ffn" in keys and keys[-1] == "wd":
+        return _trail(nd, "model", None)
+    # mamba2 conv: depthwise over conv_dim
+    if keys[-1] == "conv_w":
+        return _trail(nd, None, "model")
+    if keys[-1] == "conv_b":
+        return _trail(nd, "model")
+    # norms, biases, router, scalars: replicated
+    return P()
+
+
+def data_axes(mesh):
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def batch_spec(batch_tree, mesh, global_batch):
+    """PartitionSpec pytree for an input batch dict."""
+    import jax
+    dp = data_axes(mesh)
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+    lead = dp if global_batch % dp_size == 0 and global_batch >= dp_size else None
+
+    def spec(leaf):
+        if leaf.ndim == 0:
+            return P()
+        if leaf.ndim == 3 and leaf.shape[0] == 3:   # M-RoPE positions (3,B,S)
+            return P(None, lead, *([None] * (leaf.ndim - 2)))
+        return P(lead, *([None] * (leaf.ndim - 1)))
+
+    return jax.tree.map(spec, batch_tree)
+
+
+def decode_state_spec(state_tree, mesh, cfg, batch_size):
+    """KV caches (Lc,B,T,H,D): T on model; SSM states: head axis on model."""
+    import jax
+    dp = data_axes(mesh)
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+    b_ax = dp if batch_size % dp_size == 0 and batch_size >= dp_size else None
+    msize = mesh.shape["model"]
+
+    def spec(path, leaf):
+        keys = [str(getattr(k, "key", getattr(k, "idx", k))) for k in path]
+        name = keys[-1]
+        if name in ("k", "v"):
+            # (stack, B, T, Hkv, Dh): sequence-parallel on model
+            t = leaf.shape[2]
+            return P(None, b_ax, "model" if t % msize == 0 else None, None, None)
+        if name == "ssm":
+            # (..., B, H, P, N): heads on model
+            h = leaf.shape[-3]
+            sp = [None] * leaf.ndim
+            sp[-3] = "model" if h % msize == 0 else None
+            sp[-4] = b_ax
+            return P(*sp)
+        if name == "conv":
+            # (..., B, K, conv_dim): channels on model
+            c = leaf.shape[-1]
+            sp = [None] * leaf.ndim
+            sp[-1] = "model" if c % msize == 0 else None
+            sp[-3] = b_ax
+            return P(*sp)
+        return P()
+
+    return jax.tree_util.tree_map_with_path(spec, state_tree)

@@ -1,0 +1,2 @@
+from .arch import ArchCfg
+from .lm import forward, init_decode_state, init_params, loss_fn, serve_step

@@ -1,0 +1,106 @@
+"""Architecture config dataclass covering the 10 assigned archs."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Tuple
+
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class ArchCfg:
+    name: str
+    family: str                      # dense | moe | ssm | hybrid
+    num_layers: int
+    d_model: int
+    vocab: int
+    d_ff: int = 0
+    num_heads: int = 0
+    num_kv_heads: int = 0
+    head_dim: int = 0
+    act: str = "silu"                # silu -> SwiGLU, gelu -> GeGLU
+    qk_norm: bool = False
+    attn_softcap: float = 0.0
+    final_softcap: float = 0.0
+    sliding_window: int = 0          # window for local layers
+    local_global: bool = False       # gemma2 alternating pattern
+    sandwich_norm: bool = False      # gemma2 pre+post norms
+    rope_theta: float = 10000.0
+    mrope_sections: Tuple[int, ...] = ()
+    tie_embeddings: bool = False
+    embed_scale: bool = False        # gemma: embeds *= sqrt(d_model)
+    # MoE
+    moe: bool = False
+    num_experts: int = 0
+    top_k: int = 0
+    moe_shared_d_ff: int = 0
+    # SSM
+    ssm_state: int = 0
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2
+    ssm_chunk: int = 128
+    # hybrid: one shared attention block applied every N ssm layers (zamba2)
+    hybrid_attn_every: int = 0
+    # --- beyond-paper perf knobs (EXPERIMENTS.md §Perf); defaults = baseline
+    attn_batch_axes: Tuple[str, ...] = ()   # Ulysses-style attention reshard
+    comm_barriers: bool = False             # pin residual ARs to bf16
+    # modality frontend (stub): none | vision | audio
+    frontend: str = "none"
+    num_codebooks: int = 0
+    dtype: object = jnp.float32
+
+    @property
+    def d_inner(self):
+        return self.ssm_expand * self.d_model
+
+    @property
+    def padded_vocab(self):
+        """Embedding/head tables padded to a TP-shardable multiple of 256
+        (standard production practice; loss only reads [0, vocab))."""
+        return self.vocab + ((-self.vocab) % 256)
+
+    @property
+    def attn_free(self):
+        return self.family == "ssm"
+
+    def with_(self, **kw):
+        return replace(self, **kw)
+
+    def param_count(self) -> float:
+        """Analytic parameter count N (for MODEL_FLOPS = 6·N·D)."""
+        n = self.vocab * self.d_model  # embed
+        if not self.tie_embeddings:
+            n += self.vocab * self.d_model
+        per_layer = 0.0
+        if self.family in ("dense", "moe"):
+            attn = self.d_model * self.head_dim * (self.num_heads + 2 * self.num_kv_heads) \
+                + self.num_heads * self.head_dim * self.d_model
+            if self.moe:
+                ffn = self.num_experts * 3 * self.d_model * self.d_ff \
+                    + self.d_model * self.num_experts
+                if self.moe_shared_d_ff:
+                    ffn += 3 * self.d_model * self.moe_shared_d_ff
+            else:
+                ffn = 3 * self.d_model * self.d_ff
+            per_layer = attn + ffn
+            n += self.num_layers * per_layer
+        elif self.family == "ssm":
+            d_in_proj = 2 * self.d_inner + 2 * self.ssm_state + self.d_inner // self.ssm_head_dim
+            per_layer = self.d_model * d_in_proj + self.d_inner * self.d_model
+            n += self.num_layers * per_layer
+        elif self.family == "hybrid":
+            d_in_proj = 2 * self.d_inner + 2 * self.ssm_state + self.d_inner // self.ssm_head_dim
+            per_layer = self.d_model * d_in_proj + self.d_inner * self.d_model
+            n += self.num_layers * per_layer
+            # one shared attention block + its ffn
+            n += self.d_model * self.head_dim * (self.num_heads + 2 * self.num_kv_heads) \
+                + self.num_heads * self.head_dim * self.d_model + 3 * self.d_model * self.d_ff
+        return float(n)
+
+    def active_param_count(self) -> float:
+        """Active params per token (MoE: top_k experts only)."""
+        if not self.moe:
+            return self.param_count()
+        n = self.param_count()
+        inactive = self.num_layers * (self.num_experts - self.top_k) * 3 * self.d_model * self.d_ff
+        return float(n - inactive)

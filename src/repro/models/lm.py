@@ -1,0 +1,406 @@
+"""Composable decoder-LM covering all 10 assigned architectures.
+
+One `ArchCfg`-driven model with four structural families:
+  dense   — gemma2-9b, yi-34b, qwen3-14b, gemma-7b, qwen2-vl-7b, musicgen-medium
+  moe     — moonshot-v1-16b-a3b, llama4-scout-17b-a16e
+  ssm     — mamba2-1.3b
+  hybrid  — zamba2-2.7b (mamba2 backbone + ONE shared attention block applied
+            every `hybrid_attn_every` layers — shared weights, per-site KV cache)
+
+Layers are stacked (vmapped init) and applied with `lax.scan`, so compile time
+is depth-independent; each scan body is wrapped in `jax.checkpoint`
+(full remat) for the training path.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from ..nn import (
+    AttnCfg, MoECfg, SSMCfg, attn_decode, attn_forward, attn_init,
+    embedding, embedding_init, lecun_normal, linear, linear_init,
+    moe_forward, moe_init, rmsnorm, rmsnorm_init, ssm_decode, ssm_forward,
+    ssm_init,
+)
+from .arch import ArchCfg
+
+# ------------------------------------------------------------------ cfg maps
+
+def _attn_cfg(cfg: ArchCfg, *, local: bool) -> AttnCfg:
+    return AttnCfg(
+        d_model=cfg.d_model, num_heads=cfg.num_heads,
+        num_kv_heads=cfg.num_kv_heads, head_dim=cfg.head_dim,
+        qk_norm=cfg.qk_norm, logit_softcap=cfg.attn_softcap,
+        sliding_window=cfg.sliding_window if local else 0,
+        rope_theta=cfg.rope_theta, mrope_sections=cfg.mrope_sections,
+        batch_axes=cfg.attn_batch_axes)
+
+
+def _moe_cfg(cfg: ArchCfg) -> MoECfg:
+    return MoECfg(d_model=cfg.d_model, d_ff=cfg.d_ff,
+                  num_experts=cfg.num_experts, top_k=cfg.top_k,
+                  shared_d_ff=cfg.moe_shared_d_ff)
+
+
+def _ssm_cfg(cfg: ArchCfg) -> SSMCfg:
+    return SSMCfg(d_model=cfg.d_model, d_inner=cfg.d_inner,
+                  d_state=cfg.ssm_state, head_dim=cfg.ssm_head_dim,
+                  chunk=cfg.ssm_chunk)
+
+
+# ------------------------------------------------------------------ blocks
+
+def _ffn_init(key, cfg: ArchCfg, dtype):
+    kg, ku, kd = jax.random.split(key, 3)
+    return {"wg": lecun_normal(kg, (cfg.d_model, cfg.d_ff), dtype=dtype),
+            "wu": lecun_normal(ku, (cfg.d_model, cfg.d_ff), dtype=dtype),
+            "wd": lecun_normal(kd, (cfg.d_ff, cfg.d_model), dtype=dtype)}
+
+
+def _ffn(p, cfg: ArchCfg, x):
+    act = jax.nn.gelu if cfg.act == "gelu" else jax.nn.silu
+    g = act(x @ p["wg"].astype(x.dtype))
+    return (g * (x @ p["wu"].astype(x.dtype))) @ p["wd"].astype(x.dtype)
+
+
+def _attn_block_init(key, cfg: ArchCfg, *, local: bool, dtype):
+    ka, kf = jax.random.split(key)
+    p = {"ln1": rmsnorm_init(cfg.d_model, dtype=dtype),
+         "attn": attn_init(ka, _attn_cfg(cfg, local=local), dtype=dtype),
+         "ln2": rmsnorm_init(cfg.d_model, dtype=dtype)}
+    if cfg.moe:
+        p["moe"] = moe_init(kf, _moe_cfg(cfg), dtype=dtype)
+    else:
+        p["ffn"] = _ffn_init(kf, cfg, dtype)
+    if cfg.sandwich_norm:
+        p["ln1p"] = rmsnorm_init(cfg.d_model, dtype=dtype)
+        p["ln2p"] = rmsnorm_init(cfg.d_model, dtype=dtype)
+    return p
+
+
+def _attn_block(p, cfg: ArchCfg, x, positions, *, local: bool):
+    a = attn_forward(p["attn"], _attn_cfg(cfg, local=local), rmsnorm(p["ln1"], x), positions)
+    if cfg.sandwich_norm:
+        a = rmsnorm(p["ln1p"], a)
+    if cfg.comm_barriers:
+        # pin the row-parallel psum to the block output's bf16 dtype: the
+        # barrier stops XLA hoisting the f32 norm upcast above the AR
+        a = jax.lax.optimization_barrier(a)
+    x = x + a
+    h = rmsnorm(p["ln2"], x)
+    aux = jnp.float32(0)
+    if cfg.moe:
+        f, aux = moe_forward(p["moe"], _moe_cfg(cfg), h)
+    else:
+        f = _ffn(p["ffn"], cfg, h)
+    if cfg.sandwich_norm:
+        f = rmsnorm(p["ln2p"], f)
+    if cfg.comm_barriers:
+        f = jax.lax.optimization_barrier(f)
+    return x + f, aux
+
+
+def _attn_block_decode(p, cfg: ArchCfg, x, positions, kc, vc, cache_len, *, local: bool):
+    a, kc, vc = attn_decode(p["attn"], _attn_cfg(cfg, local=local),
+                            rmsnorm(p["ln1"], x), positions, kc, vc, cache_len)
+    if cfg.sandwich_norm:
+        a = rmsnorm(p["ln1p"], a)
+    x = x + a
+    h = rmsnorm(p["ln2"], x)
+    if cfg.moe:
+        f, _ = moe_forward(p["moe"], _moe_cfg(cfg), h)
+    else:
+        f = _ffn(p["ffn"], cfg, h)
+    if cfg.sandwich_norm:
+        f = rmsnorm(p["ln2p"], f)
+    return x + f, kc, vc
+
+
+def _ssm_block_init(key, cfg: ArchCfg, dtype):
+    return {"ln": rmsnorm_init(cfg.d_model, dtype=dtype),
+            "ssm": ssm_init(key, _ssm_cfg(cfg), dtype=dtype)}
+
+
+def _ssm_block(p, cfg: ArchCfg, x):
+    return x + ssm_forward(p["ssm"], _ssm_cfg(cfg), rmsnorm(p["ln"], x))
+
+
+def _ssm_block_decode(p, cfg: ArchCfg, x, conv_s, ssm_s):
+    y, conv_s, ssm_s = ssm_decode(p["ssm"], _ssm_cfg(cfg), rmsnorm(p["ln"], x), conv_s, ssm_s)
+    return x + y, conv_s, ssm_s
+
+
+# ------------------------------------------------------------------ init
+
+def init_params(key, cfg: ArchCfg):
+    dtype = cfg.dtype
+    ke, kb, kh, ks = jax.random.split(key, 4)
+    params = {"final_norm": rmsnorm_init(cfg.d_model, dtype=dtype)}
+    params["embed"] = embedding_init(ke, cfg.padded_vocab, cfg.d_model, dtype=dtype)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = linear_init(kh, cfg.d_model, cfg.padded_vocab,
+                                        bias=False, dtype=dtype)
+
+    if cfg.family in ("dense", "moe"):
+        if cfg.local_global:
+            assert cfg.num_layers % 2 == 0
+            n_pair = cfg.num_layers // 2
+            keys = jax.random.split(kb, n_pair)
+            params["blocks"] = jax.vmap(
+                lambda k: {
+                    "local": _attn_block_init(jax.random.fold_in(k, 0), cfg, local=True, dtype=dtype),
+                    "global": _attn_block_init(jax.random.fold_in(k, 1), cfg, local=False, dtype=dtype),
+                })(keys)
+        else:
+            keys = jax.random.split(kb, cfg.num_layers)
+            params["blocks"] = jax.vmap(
+                lambda k: _attn_block_init(k, cfg, local=False, dtype=dtype))(keys)
+    elif cfg.family == "ssm":
+        keys = jax.random.split(kb, cfg.num_layers)
+        params["blocks"] = jax.vmap(lambda k: _ssm_block_init(k, cfg, dtype))(keys)
+    elif cfg.family == "hybrid":
+        E = cfg.hybrid_attn_every
+        assert cfg.num_layers % E == 0
+        groups = cfg.num_layers // E
+        keys = jax.random.split(kb, groups)
+        params["blocks"] = jax.vmap(
+            lambda k: jax.vmap(lambda kk: _ssm_block_init(kk, cfg, dtype))(
+                jax.random.split(k, E)))(keys)
+        params["shared_attn"] = _attn_block_init(ks, cfg, local=False, dtype=dtype)
+    else:
+        raise ValueError(cfg.family)
+    return params
+
+
+# ------------------------------------------------------------------ forward
+
+def _embed_in(params, cfg: ArchCfg, batch):
+    if cfg.frontend != "none":
+        x = batch["embeds"]            # stub frontend supplies embeddings
+    else:
+        x = embedding(params["embed"], batch["tokens"], dtype=cfg.dtype)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    return x
+
+
+def _logits(params, cfg: ArchCfg, x):
+    x = rmsnorm(params["final_norm"], x)
+    if cfg.tie_embeddings:
+        logits = x @ params["embed"]["table"].astype(x.dtype).T
+    else:
+        logits = linear(params["lm_head"], x)
+    if cfg.final_softcap > 0:
+        c = cfg.final_softcap
+        logits = c * jnp.tanh(logits.astype(jnp.float32) / c).astype(logits.dtype)
+    return logits
+
+
+def _scan(body, x, stacked, *, unroll=False):
+    """lax.scan over stacked layer params; Python loop when unroll=True
+    (used by the roofline harness to measure true per-layer HLO terms —
+    XLA's cost_analysis counts while-loop bodies once)."""
+    if not unroll:
+        return jax.lax.scan(body, x, stacked)
+    L = jax.tree.leaves(stacked)[0].shape[0]
+    ys = []
+    for i in range(L):
+        x, y = body(x, jax.tree.map(lambda a: a[i], stacked))
+        ys.append(y)
+    return x, jnp.stack(ys)
+
+
+def backbone(params, cfg: ArchCfg, batch, *, remat=True, unroll=False):
+    """Full-sequence backbone. Returns (hidden (B,S,D), aux_loss)."""
+    x = _embed_in(params, cfg, batch)
+    B, S, _ = x.shape
+    positions = batch.get("positions")
+    if positions is None:
+        positions = jnp.arange(S)[None]
+        if cfg.mrope_sections:
+            positions = jnp.broadcast_to(positions[None], (3, B, S))
+
+    ckpt = jax.checkpoint if remat else (lambda f: f)
+
+    if cfg.family in ("dense", "moe"):
+        if cfg.local_global:
+            @ckpt
+            def body(x, bp):
+                x, a1 = _attn_block(bp["local"], cfg, x, positions, local=True)
+                x, a2 = _attn_block(bp["global"], cfg, x, positions, local=False)
+                return x, a1 + a2
+        else:
+            @ckpt
+            def body(x, bp):
+                return _attn_block(bp, cfg, x, positions, local=False)
+        x, auxs = _scan(body, x, params["blocks"], unroll=unroll)
+        aux = auxs.sum()
+    elif cfg.family == "ssm":
+        @ckpt
+        def body(x, bp):
+            return _ssm_block(bp, cfg, x), jnp.float32(0)
+        x, _ = _scan(body, x, params["blocks"], unroll=unroll)
+        aux = jnp.float32(0)
+    else:  # hybrid
+        shared = params["shared_attn"]
+
+        @ckpt
+        def body(x, gp):
+            def inner(x, bp):
+                return _ssm_block(bp, cfg, x), None
+            x, _ = jax.lax.scan(inner, x, gp)
+            x, a = _attn_block(shared, cfg, x, positions, local=False)
+            return x, a
+        x, auxs = _scan(body, x, params["blocks"], unroll=unroll)
+        aux = auxs.sum()
+    return x, aux
+
+
+def forward(params, cfg: ArchCfg, batch, *, remat=True, unroll=False):
+    """Full-sequence forward. Returns (logits, aux_loss)."""
+    x, aux = backbone(params, cfg, batch, remat=remat, unroll=unroll)
+    return _logits(params, cfg, x), aux
+
+
+def prefill_step(params, cfg: ArchCfg, batch, *, unroll=False):
+    """Inference prefill: run the backbone, project only the last position
+    (the (B,S,V) logits tensor is never materialized)."""
+    x, _ = backbone(params, cfg, batch, remat=False, unroll=unroll)
+    return _logits(params, cfg, x[:, -1:])[:, 0]
+
+
+def _sharded_nll(logits, labels):
+    """Vocab-shard-local cross-entropy (§Perf): every reduction over the
+    (model-sharded) vocab axis produces only (B, S)-sized partial results,
+    so the partitioner never gathers logits or the lm_head weight. The
+    take_along_axis formulation made XLA all-gather the full f32
+    [vocab, d_model] table per rank."""
+    V = logits.shape[-1]
+    lmax = jax.lax.stop_gradient(logits).max(-1, keepdims=True)
+    shifted = (logits - lmax).astype(jnp.float32)
+    lse = jnp.log(jnp.exp(shifted).sum(-1))          # lmax cancels in nll
+    sel = jnp.arange(V)[None, None, :] == labels[..., None]
+    label_logit = jnp.where(sel, shifted, 0.0).sum(-1)
+    return lse - label_logit
+
+
+def loss_fn(params, cfg: ArchCfg, batch, *, unroll=False):
+    logits, aux = forward(params, cfg, batch, unroll=unroll)
+    labels = batch["labels"]
+    nll = _sharded_nll(logits, labels)
+    mask = batch.get("mask")
+    if mask is None:
+        loss = nll.mean()
+    else:
+        loss = (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return loss + 0.01 * aux, {"nll": loss, "aux": aux}
+
+
+# ------------------------------------------------------------------ decode
+
+def init_decode_state(cfg: ArchCfg, batch_size: int, max_len: int, dtype=None):
+    """KV caches / SSM states for serve_step, as zeros (abstract-able)."""
+    dtype = dtype or cfg.dtype
+    st = {"cache_len": jnp.zeros((), jnp.int32)}
+    if cfg.family in ("dense", "moe"):
+        L = cfg.num_layers // (2 if cfg.local_global else 1)
+        n_caches = cfg.num_layers
+        shape = (n_caches, batch_size, max_len, cfg.num_kv_heads, cfg.head_dim)
+        st["k"] = jnp.zeros(shape, dtype)
+        st["v"] = jnp.zeros(shape, dtype)
+    elif cfg.family == "ssm":
+        conv_dim = cfg.d_inner + 2 * cfg.ssm_state
+        H = cfg.d_inner // cfg.ssm_head_dim
+        st["conv"] = jnp.zeros((cfg.num_layers, batch_size, 3, conv_dim), dtype)
+        st["ssm"] = jnp.zeros((cfg.num_layers, batch_size, H,
+                               cfg.ssm_head_dim, cfg.ssm_state), dtype)
+    else:  # hybrid
+        E = cfg.hybrid_attn_every
+        G = cfg.num_layers // E
+        conv_dim = cfg.d_inner + 2 * cfg.ssm_state
+        H = cfg.d_inner // cfg.ssm_head_dim
+        st["conv"] = jnp.zeros((G, E, batch_size, 3, conv_dim), dtype)
+        st["ssm"] = jnp.zeros((G, E, batch_size, H, cfg.ssm_head_dim, cfg.ssm_state), dtype)
+        st["k"] = jnp.zeros((G, batch_size, max_len, cfg.num_kv_heads, cfg.head_dim), dtype)
+        st["v"] = jnp.zeros((G, batch_size, max_len, cfg.num_kv_heads, cfg.head_dim), dtype)
+    return st
+
+
+def _scan2(body, x, xs, *, unroll=False):
+    """scan over (stacked params, caches); unrolled variant for roofline."""
+    if not unroll:
+        return jax.lax.scan(body, x, xs)
+    L = jax.tree.leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(L):
+        x, y = body(x, jax.tree.map(lambda a: a[i], xs))
+        ys.append(y)
+    return x, jax.tree.map(lambda *a: jnp.stack(a), *ys)
+
+
+def serve_step(params, cfg: ArchCfg, state, batch, *, unroll=False):
+    """One decode step: batch has tokens (B,1) (or embeds (B,1,D)).
+    Returns (new_state, logits (B, vocab))."""
+    x = _embed_in(params, cfg, batch)
+    B = x.shape[0]
+    t = state["cache_len"]
+    positions = jnp.full((B, 1), t, jnp.int32)
+    if cfg.mrope_sections:
+        positions = jnp.broadcast_to(positions[None], (3, B, 1))
+
+    if cfg.family in ("dense", "moe"):
+        if cfg.local_global:
+            def body(x, xs):
+                bp, kc2, vc2 = xs
+                x, k0, v0 = _attn_block_decode(bp["local"], cfg, x, positions,
+                                               kc2[0], vc2[0], t, local=True)
+                x, k1, v1 = _attn_block_decode(bp["global"], cfg, x, positions,
+                                               kc2[1], vc2[1], t, local=False)
+                return x, (jnp.stack([k0, k1]), jnp.stack([v0, v1]))
+            P = cfg.num_layers // 2
+            kc = state["k"].reshape((P, 2) + state["k"].shape[1:])
+            vc = state["v"].reshape((P, 2) + state["v"].shape[1:])
+            x, (nk, nv) = _scan2(body, x, (params["blocks"], kc, vc),
+                                 unroll=unroll)
+            state["k"] = nk.reshape(state["k"].shape)
+            state["v"] = nv.reshape(state["v"].shape)
+        else:
+            def body(x, xs):
+                bp, kc, vc = xs
+                x, kc, vc = _attn_block_decode(bp, cfg, x, positions, kc, vc, t, local=False)
+                return x, (kc, vc)
+            x, (nk, nv) = _scan2(body, x, (params["blocks"], state["k"],
+                                           state["v"]), unroll=unroll)
+            state["k"], state["v"] = nk, nv
+    elif cfg.family == "ssm":
+        def body(x, xs):
+            bp, cs, ss = xs
+            x, cs, ss = _ssm_block_decode(bp, cfg, x, cs, ss)
+            return x, (cs, ss)
+        x, (ncs, nss) = _scan2(body, x, (params["blocks"], state["conv"],
+                                         state["ssm"]), unroll=unroll)
+        state["conv"], state["ssm"] = ncs, nss
+    else:  # hybrid
+        shared = params["shared_attn"]
+
+        def body(x, xs):
+            gp, cs, ss, kc, vc = xs
+
+            def inner(x, ys):
+                bp, c, s = ys
+                x, c, s = _ssm_block_decode(bp, cfg, x, c, s)
+                return x, (c, s)
+            x, (cs, ss) = jax.lax.scan(inner, x, (gp, cs, ss))
+            x, kc, vc = _attn_block_decode(shared, cfg, x, positions, kc, vc, t, local=False)
+            return x, (cs, ss, kc, vc)
+        x, (ncs, nss, nk, nv) = _scan2(
+            body, x, (params["blocks"], state["conv"], state["ssm"],
+                      state["k"], state["v"]), unroll=unroll)
+        state["conv"], state["ssm"], state["k"], state["v"] = ncs, nss, nk, nv
+
+    logits = _logits(params, cfg, x)[:, 0]
+    state["cache_len"] = t + 1
+    return state, logits

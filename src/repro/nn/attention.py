@@ -1,0 +1,128 @@
+"""Grouped-query attention with the variants the assigned archs need:
+
+- GQA/MQA (num_kv_heads <= num_heads), head_dim decoupled from d_model
+- qk-norm (Qwen3), attn-logit softcapping (Gemma2), sliding window (Gemma2 local)
+- RoPE / M-RoPE applied by the caller (positions passed in)
+- train path (full causal) and decode path (1 new token against a KV cache)
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from jax.sharding import PartitionSpec as P
+
+from .layers import linear, linear_init, rmsnorm, rmsnorm_init
+from .rope import apply_mrope, apply_rope
+
+
+class AttnCfg(NamedTuple):
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+    qk_norm: bool = False
+    logit_softcap: float = 0.0     # 0 disables
+    sliding_window: int = 0        # 0 = global
+    rope_theta: float = 10000.0
+    mrope_sections: tuple = ()     # non-empty enables M-RoPE
+    batch_axes: tuple = ()         # reshard q/k/v batch-wise for the SDPA
+
+
+def attn_init(key, cfg: AttnCfg, *, dtype=jnp.float32):
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    p = {
+        "q": linear_init(kq, cfg.d_model, cfg.num_heads * cfg.head_dim, bias=False, dtype=dtype),
+        "k": linear_init(kk, cfg.d_model, cfg.num_kv_heads * cfg.head_dim, bias=False, dtype=dtype),
+        "v": linear_init(kv, cfg.d_model, cfg.num_kv_heads * cfg.head_dim, bias=False, dtype=dtype),
+        "o": linear_init(ko, cfg.num_heads * cfg.head_dim, cfg.d_model, bias=False, dtype=dtype),
+    }
+    if cfg.qk_norm:
+        p["qn"] = rmsnorm_init(cfg.head_dim, dtype=dtype)
+        p["kn"] = rmsnorm_init(cfg.head_dim, dtype=dtype)
+    return p
+
+
+def _project_qkv(p, cfg: AttnCfg, x, positions):
+    B, S, _ = x.shape
+    q = linear(p["q"], x).reshape(B, S, cfg.num_heads, cfg.head_dim)
+    k = linear(p["k"], x).reshape(B, S, cfg.num_kv_heads, cfg.head_dim)
+    v = linear(p["v"], x).reshape(B, S, cfg.num_kv_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        q, k = rmsnorm(p["qn"], q), rmsnorm(p["kn"], k)
+    if cfg.mrope_sections:
+        q = apply_mrope(q, positions, cfg.mrope_sections, theta=cfg.rope_theta)
+        k = apply_mrope(k, positions, cfg.mrope_sections, theta=cfg.rope_theta)
+    else:
+        q = apply_rope(q, positions, theta=cfg.rope_theta)
+        k = apply_rope(k, positions, theta=cfg.rope_theta)
+    return q, k, v
+
+
+def _sdpa(cfg: AttnCfg, q, k, v, mask):
+    """q: (B,S,Hq,D), k/v: (B,T,Hkv,D), mask: (B,1,S,T) or broadcastable."""
+    group = cfg.num_heads // cfg.num_kv_heads
+    B, S, Hq, D = q.shape
+    T = k.shape[1]
+    qg = q.reshape(B, S, cfg.num_kv_heads, group, D)
+    logits = jnp.einsum("bskgd,btkd->bkgst", qg, k).astype(jnp.float32)
+    logits = logits / jnp.sqrt(jnp.float32(D))
+    if cfg.logit_softcap > 0:
+        c = cfg.logit_softcap
+        logits = c * jnp.tanh(logits / c)
+    logits = jnp.where(mask[:, :, None] if mask.ndim == 4 else mask, logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", w, v)
+    return out.reshape(B, S, Hq * D)
+
+
+def causal_mask(S, T=None, *, sliding_window=0, dtype=jnp.bool_):
+    T = T or S
+    i = jnp.arange(S)[:, None] + (T - S)  # absolute query positions
+    j = jnp.arange(T)[None, :]
+    m = j <= i
+    if sliding_window > 0:
+        m &= j > i - sliding_window
+    return m[None, None].astype(dtype)  # (1,1,S,T)
+
+
+def attn_forward(p, cfg: AttnCfg, x, positions):
+    """Training / prefill path. x: (B,S,d_model).
+
+    With cfg.batch_axes set, q/k/v are resharded so the quadratic SDPA is
+    batch-parallel across those mesh axes (DeepSpeed-Ulysses pattern): the
+    S x S logits then never cross devices — only the (cheap) head-sharded
+    projections pay an all-to-all."""
+    q, k, v = _project_qkv(p, cfg, x, positions)
+    if cfg.batch_axes:
+        spec = P(tuple(cfg.batch_axes), None, None, None)
+        q = jax.lax.with_sharding_constraint(q, spec)
+        k = jax.lax.with_sharding_constraint(k, spec)
+        v = jax.lax.with_sharding_constraint(v, spec)
+    mask = causal_mask(x.shape[1], sliding_window=cfg.sliding_window)
+    out = _sdpa(cfg, q, k, v, mask)
+    return linear(p["o"], out)
+
+
+def attn_decode(p, cfg: AttnCfg, x, positions, k_cache, v_cache, cache_len):
+    """One-token decode. x: (B,1,d); caches: (B,T,Hkv,D); cache_len scalar.
+
+    Returns (out, new_k_cache, new_v_cache). The new token is written at
+    index ``cache_len`` (static ring not needed for the dry-run shape).
+    """
+    B, one, _ = x.shape
+    q, k, v = _project_qkv(p, cfg, x, positions)
+    T = k_cache.shape[1]
+    idx = jnp.full((B,), cache_len, dtype=jnp.int32)
+    k_cache = jax.vmap(lambda c, u, i: jax.lax.dynamic_update_slice(c, u, (i, 0, 0)))(
+        k_cache, k.astype(k_cache.dtype), idx)
+    v_cache = jax.vmap(lambda c, u, i: jax.lax.dynamic_update_slice(c, u, (i, 0, 0)))(
+        v_cache, v.astype(v_cache.dtype), idx)
+    j = jnp.arange(T)[None, None, None, :]
+    mask = j <= cache_len  # (1,1,1,T)
+    if cfg.sliding_window > 0:
+        mask &= j > cache_len - cfg.sliding_window
+    out = _sdpa(cfg, q, k_cache, v_cache, mask)
+    return linear(p["o"], out), k_cache, v_cache

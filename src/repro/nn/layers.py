@@ -1,0 +1,134 @@
+"""Pure-JAX NN substrate: parameters are nested dicts of jnp arrays.
+
+No flax/optax in this environment — every layer is a (init_fn, apply_fn)
+pair operating on explicit parameter pytrees. Convention:
+
+    params = linear_init(key, d_in, d_out)
+    y = linear(params, x)
+
+Dtype policy: parameters are created in ``param_dtype`` (default float32);
+``apply`` casts weights to the activation dtype so the same tree serves
+fp32 training on CPU and bf16 lowering for the TPU dry-run.
+"""
+from __future__ import annotations
+
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------- helpers
+def _cast(w, x):
+    return w.astype(x.dtype) if w.dtype != x.dtype else w
+
+
+def uniform_scale_init(key, shape, scale, dtype=jnp.float32):
+    return jax.random.uniform(key, shape, dtype, minval=-scale, maxval=scale)
+
+
+def lecun_normal(key, shape, in_axis=-2, dtype=jnp.float32):
+    fan_in = shape[in_axis]
+    std = 1.0 / math.sqrt(fan_in)
+    return std * jax.random.truncated_normal(key, -2.0, 2.0, shape).astype(dtype)
+
+
+def normal_init(key, shape, std=0.02, dtype=jnp.float32):
+    return std * jax.random.normal(key, shape).astype(dtype)
+
+
+# ---------------------------------------------------------------- linear
+def linear_init(key, d_in, d_out, *, bias=True, dtype=jnp.float32):
+    kw, kb = jax.random.split(key)
+    p = {"w": lecun_normal(kw, (d_in, d_out), dtype=dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def linear(p, x):
+    y = x @ _cast(p["w"], x)
+    if "b" in p:
+        y = y + _cast(p["b"], x)
+    return y
+
+
+# ---------------------------------------------------------------- MLP
+def mlp_init(key, sizes: Sequence[int], *, bias=True, dtype=jnp.float32):
+    """sizes = [d_in, h1, ..., d_out]; relu between layers."""
+    keys = jax.random.split(key, len(sizes) - 1)
+    return {
+        f"l{i}": linear_init(k, sizes[i], sizes[i + 1], bias=bias, dtype=dtype)
+        for i, k in enumerate(keys)
+    }
+
+
+def mlp(p, x, *, act=jax.nn.relu):
+    n = len(p)
+    for i in range(n):
+        x = linear(p[f"l{i}"], x)
+        if i < n - 1:
+            x = act(x)
+    return x
+
+
+# ---------------------------------------------------------------- norms
+def rmsnorm_init(d, *, dtype=jnp.float32):
+    return {"scale": jnp.zeros((d,), dtype)}  # gemma-style (1 + scale)
+
+
+def rmsnorm(p, x, *, eps=1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    nx = (x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)).astype(x.dtype)
+    return nx * (1.0 + _cast(p["scale"], x))
+
+
+def layernorm_init(d, *, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(p, x, *, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    nx = ((xf - mu) * jax.lax.rsqrt(var + eps)).astype(x.dtype)
+    return nx * _cast(p["scale"], x) + _cast(p["bias"], x)
+
+
+# ---------------------------------------------------------------- embedding
+def embedding_init(key, vocab, d, *, dtype=jnp.float32):
+    return {"table": normal_init(key, (vocab, d), std=1.0 / math.sqrt(d), dtype=dtype)}
+
+
+def embedding(p, ids, dtype=None):
+    t = p["table"]
+    if dtype is not None:
+        t = t.astype(dtype)
+    return jnp.take(t, ids, axis=0)
+
+
+# ---------------------------------------------------------------- GRU cell
+def gru_init(key, d_in, d_h, *, dtype=jnp.float32):
+    """Standard GRU cell (torch.nn.GRUCell semantics)."""
+    k = jax.random.split(key, 4)
+    s_in, s_h = 1.0 / math.sqrt(d_h), 1.0 / math.sqrt(d_h)
+    return {
+        "wi": uniform_scale_init(k[0], (d_in, 3 * d_h), s_in, dtype),
+        "wh": uniform_scale_init(k[1], (d_h, 3 * d_h), s_h, dtype),
+        "bi": jnp.zeros((3 * d_h,), dtype),
+        "bh": jnp.zeros((3 * d_h,), dtype),
+    }
+
+
+def gru_cell(p, x, h):
+    """x: (..., d_in), h: (..., d_h) -> new h. Gate order: r, z, n (torch)."""
+    gi = x @ _cast(p["wi"], x) + _cast(p["bi"], x)
+    gh = h @ _cast(p["wh"], h) + _cast(p["bh"], h)
+    d_h = h.shape[-1]
+    ir, iz, in_ = jnp.split(gi, 3, axis=-1)
+    hr, hz, hn = jnp.split(gh, 3, axis=-1)
+    r = jax.nn.sigmoid(ir + hr)
+    z = jax.nn.sigmoid(iz + hz)
+    n = jnp.tanh(in_ + r * hn)
+    return (1.0 - z) * n + z * h

@@ -1,0 +1,107 @@
+"""Mixture-of-Experts layer with GShard/Switch-style grouped capacity dispatch.
+
+Tokens are split into groups of `group_size`; within each group, each
+expert accepts at most C = group*top_k*capacity_factor/E tokens. Dispatch
+and combine tensors are built per k-th choice (einsum('ge,gc->gec')), so no
+(G, K, E, C) intermediate is ever materialized. Expert FFNs run as one
+batched einsum over the expert axis — shardable on the `model` mesh axis
+(expert parallelism); the group axis shards on `data` (the dispatch then
+rides the all-to-all XLA inserts between the two).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import lecun_normal, linear, linear_init
+
+
+class MoECfg(NamedTuple):
+    d_model: int
+    d_ff: int                 # per-expert hidden
+    num_experts: int
+    top_k: int
+    capacity_factor: float = 1.25
+    shared_d_ff: int = 0      # llama4-style always-on shared expert (0 = off)
+    group_size: int = 4096
+
+
+def moe_init(key, cfg: MoECfg, *, dtype=jnp.float32):
+    kr, k1, k2, k3, ks = jax.random.split(key, 5)
+    E, D, F = cfg.num_experts, cfg.d_model, cfg.d_ff
+    p = {
+        "router": linear_init(kr, D, E, bias=False, dtype=dtype),
+        # SwiGLU experts: gate, up, down
+        "wg": lecun_normal(k1, (E, D, F), in_axis=1, dtype=dtype),
+        "wu": lecun_normal(k2, (E, D, F), in_axis=1, dtype=dtype),
+        "wd": lecun_normal(k3, (E, F, D), in_axis=1, dtype=dtype),
+    }
+    if cfg.shared_d_ff:
+        kg, ku, kd = jax.random.split(ks, 3)
+        p["shared"] = {
+            "wg": lecun_normal(kg, (D, cfg.shared_d_ff), dtype=dtype),
+            "wu": lecun_normal(ku, (D, cfg.shared_d_ff), dtype=dtype),
+            "wd": lecun_normal(kd, (cfg.shared_d_ff, D), dtype=dtype),
+        }
+    return p
+
+
+def _capacity(cfg: MoECfg, group: int) -> int:
+    c = int(cfg.capacity_factor * group * cfg.top_k / cfg.num_experts)
+    return max(4, -(-c // 4) * 4)
+
+
+def moe_forward(p, cfg: MoECfg, x):
+    """x: (B, S, D) -> (out (B, S, D), aux_loss)."""
+    B, S, D = x.shape
+    N = B * S
+    G = cfg.group_size if N % cfg.group_size == 0 else N
+    ng = N // G
+    E, K = cfg.num_experts, cfg.top_k
+    C = _capacity(cfg, G)
+    xt = x.reshape(ng, G, D)
+
+    logits = linear(p["router"], xt).astype(jnp.float32)         # (ng, G, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    topv, topi = jax.lax.top_k(probs, K)                         # (ng, G, K)
+    topv = topv / jnp.maximum(topv.sum(-1, keepdims=True), 1e-9)
+
+    onehot = jax.nn.one_hot(topi, E, dtype=jnp.float32)          # (ng, G, K, E)
+    # GShard priority: all k=0 choices first, then k=1, ... ; token order
+    # inside each k. position of each (k, g) within its expert's buffer:
+    flat = onehot.transpose(0, 2, 1, 3).reshape(ng, K * G, E)
+    pos = jnp.cumsum(flat, axis=1) * flat - 1.0                  # (ng, K*G, E)
+    pos = pos.reshape(ng, K, G, E).transpose(0, 2, 1, 3)         # (ng, G, K, E)
+    pos_k = (pos * onehot).sum(-1)                               # (ng, G, K)
+    in_cap = (pos_k < C) & (pos_k >= 0)
+
+    disp = jnp.zeros((ng, G, E, C), x.dtype)
+    comb = jnp.zeros((ng, G, E, C), jnp.float32)
+    for k in range(K):
+        oc = jax.nn.one_hot(pos_k[..., k], C, dtype=jnp.float32) \
+            * in_cap[..., k:k + 1]                               # (ng, G, C)
+        oe = onehot[:, :, k]                                     # (ng, G, E)
+        d_k = jnp.einsum("age,agc->agec", oe, oc)
+        disp = disp + d_k.astype(x.dtype)
+        comb = comb + d_k * topv[..., k][..., None, None]
+
+    # route into per-expert buffers and run the expert FFNs (EP einsum)
+    buf = jnp.einsum("agec,agd->aecd", disp, xt)                 # (ng, E, C, D)
+    g = jnp.einsum("aecd,edf->aecf", buf, p["wg"].astype(x.dtype))
+    u = jnp.einsum("aecd,edf->aecf", buf, p["wu"].astype(x.dtype))
+    h = jax.nn.silu(g) * u
+    eout = jnp.einsum("aecf,efd->aecd", h, p["wd"].astype(x.dtype))
+    out = jnp.einsum("agec,aecd->agd", comb.astype(x.dtype), eout)
+
+    if cfg.shared_d_ff:
+        sp = p["shared"]
+        sh = jax.nn.silu(xt @ sp["wg"].astype(x.dtype)) * (xt @ sp["wu"].astype(x.dtype))
+        out = out + sh @ sp["wd"].astype(x.dtype)
+
+    # Switch-style load-balancing aux loss
+    me = probs.mean((0, 1))                                      # (E,)
+    ce = onehot.sum(2).mean((0, 1))                              # routed fraction
+    aux = E * jnp.sum(me * ce) / cfg.top_k
+    return out.reshape(B, S, D), aux

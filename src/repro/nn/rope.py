@@ -1,0 +1,43 @@
+"""Rotary position embeddings: standard RoPE and Qwen2-VL M-RoPE."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rope_freqs(head_dim, theta=10000.0):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, *, theta=10000.0):
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    inv = rope_freqs(d, theta)                       # (D/2,)
+    ang = positions[..., None].astype(jnp.float32) * inv  # (..., S, D/2)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x, positions_3d, sections, *, theta=10000.0):
+    """Qwen2-VL multimodal RoPE.
+
+    x: (B, S, H, D); positions_3d: (3, B, S) — temporal/height/width ids
+    (equal for pure-text tokens); sections: 3 ints summing to D//2, the
+    frequency-band split across the three position streams.
+    """
+    d = x.shape[-1]
+    inv = rope_freqs(d, theta)                            # (D/2,)
+    # angle per stream: (3, B, S, D/2)
+    ang = positions_3d[..., None].astype(jnp.float32) * inv
+    # select stream per frequency band
+    sec = []
+    start = 0
+    for i, s in enumerate(sections):
+        sec.append(ang[i, ..., start:start + s])
+        start += s
+    ang = jnp.concatenate(sec, axis=-1)                   # (B, S, D/2)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)

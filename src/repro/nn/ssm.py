@@ -1,0 +1,158 @@
+"""Mamba2 (SSD — state-space duality) block, chunk-parallel formulation.
+
+The chunked algorithm follows the SSD paper (arXiv:2405.21060, Listing 1):
+intra-chunk contributions are dense masked matmuls (MXU friendly), the
+inter-chunk recurrence is a scan over per-chunk states. Decode is the O(1)
+recurrent step with a conv ring buffer + SSM state — this is why the
+`long_500k` shape is runnable for SSM/hybrid archs.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import lecun_normal, linear, linear_init, rmsnorm, rmsnorm_init
+
+
+class SSMCfg(NamedTuple):
+    d_model: int
+    d_inner: int          # expand * d_model
+    d_state: int
+    head_dim: int = 64
+    d_conv: int = 4
+    chunk: int = 128
+
+    @property
+    def nheads(self):
+        return self.d_inner // self.head_dim
+
+
+def ssm_init(key, cfg: SSMCfg, *, dtype=jnp.float32):
+    k = jax.random.split(key, 5)
+    d_in_proj = 2 * cfg.d_inner + 2 * cfg.d_state + cfg.nheads
+    conv_dim = cfg.d_inner + 2 * cfg.d_state
+    return {
+        "in_proj": linear_init(k[0], cfg.d_model, d_in_proj, bias=False, dtype=dtype),
+        "conv_w": lecun_normal(k[1], (cfg.d_conv, conv_dim), in_axis=0, dtype=dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.log(jnp.arange(1, cfg.nheads + 1, dtype=jnp.float32)).astype(dtype),
+        "D": jnp.ones((cfg.nheads,), dtype),
+        "dt_bias": jnp.zeros((cfg.nheads,), dtype),
+        "norm": rmsnorm_init(cfg.d_inner, dtype=dtype),
+        "out_proj": linear_init(k[2], cfg.d_inner, cfg.d_model, bias=False, dtype=dtype),
+    }
+
+
+def _segsum(x):
+    """x: (..., q) -> (..., q, q) lower-triangular segment sums."""
+    q = x.shape[-1]
+    xc = jnp.cumsum(x, axis=-1)
+    ss = xc[..., :, None] - xc[..., None, :] + x[..., None, :] * 0  # (…, q, q)
+    ss = xc[..., :, None] - xc[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool), 0)
+    return jnp.where(mask, ss, -jnp.inf)
+
+
+def _causal_conv(x, w, b):
+    """x: (B, S, C); w: (K, C) depthwise causal conv."""
+    K = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + x.shape[1], :] * w[i] for i in range(K))
+    return out + b
+
+
+def _ssd_chunked(xh, dtA, Bm, Cm, chunk, h0=None):
+    """SSD scan. xh: (B,S,H,P) (already dt-scaled), dtA: (B,S,H) log-decay,
+    Bm/Cm: (B,S,N). Returns (y: (B,S,H,P), final_state: (B,H,P,N))."""
+    Bsz, S, H, P = xh.shape
+    N = Bm.shape[-1]
+    assert S % chunk == 0, (S, chunk)
+    c = S // chunk
+    xc = xh.reshape(Bsz, c, chunk, H, P)
+    Ac = dtA.reshape(Bsz, c, chunk, H).transpose(0, 3, 1, 2)     # (B,H,c,q)
+    Bc = Bm.reshape(Bsz, c, chunk, N)
+    Cc = Cm.reshape(Bsz, c, chunk, N)
+
+    A_cs = jnp.cumsum(Ac, axis=-1)                               # (B,H,c,q)
+    L = jnp.exp(_segsum(Ac))                                     # (B,H,c,q,q)
+    # intra-chunk
+    y_diag = jnp.einsum("bcln,bcsn,bhcls,bcshp->bclhp", Cc, Bc, L, xc)
+    # per-chunk end states (accumulated in f32 for bf16 inputs)
+    decay_states = jnp.exp(A_cs[..., -1:] - A_cs)                # (B,H,c,q)
+    states = jnp.einsum("bcln,bhcl,bclhp->bchpn", Bc, decay_states,
+                        xc).astype(jnp.float32)
+    # inter-chunk recurrence: h_{k+1} = exp(sum A_k) h_k + states_k
+    chunk_decay = jnp.exp(A_cs[..., -1])                         # (B,H,c)
+    if h0 is None:
+        h0 = jnp.zeros((Bsz, H, P, N), jnp.float32)
+    else:
+        h0 = h0.astype(jnp.float32)
+
+    def step(h, inp):
+        d, s = inp                                               # d: (B,H), s: (B,H,P,N)
+        h_new = h * d[..., None, None] + s
+        return h_new, h
+    (h_final, h_prevs) = jax.lax.scan(
+        step, h0, (chunk_decay.transpose(2, 0, 1), states.transpose(1, 0, 2, 3, 4)))
+    h_prevs = h_prevs.transpose(1, 0, 2, 3, 4)                   # (B,c,H,P,N)
+    # inter-chunk contribution
+    state_decay = jnp.exp(A_cs)                                  # (B,H,c,q)
+    y_off = jnp.einsum("bcln,bchpn,bhcl->bclhp", Cc.astype(jnp.float32),
+                       h_prevs, state_decay)
+    y = (y_diag.astype(jnp.float32) + y_off).reshape(Bsz, S, H, P)
+    return y.astype(xh.dtype), h_final.astype(xh.dtype)
+
+
+def ssm_forward(p, cfg: SSMCfg, x):
+    """Training path. x: (B, S, d_model) -> (B, S, d_model)."""
+    B_, S, _ = x.shape
+    zxbcdt = linear(p["in_proj"], x)
+    z, xr, Bm, Cm, dt = jnp.split(
+        zxbcdt,
+        [cfg.d_inner, 2 * cfg.d_inner, 2 * cfg.d_inner + cfg.d_state,
+         2 * cfg.d_inner + 2 * cfg.d_state], axis=-1)
+    xbc = jnp.concatenate([xr, Bm, Cm], axis=-1)
+    xbc = jax.nn.silu(_causal_conv(xbc, p["conv_w"].astype(x.dtype), p["conv_b"].astype(x.dtype)))
+    xr, Bm, Cm = jnp.split(xbc, [cfg.d_inner, cfg.d_inner + cfg.d_state], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))  # (B,S,H)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))                 # (H,)
+    dtA = dt * A                                                 # log-decay
+    xh = xr.reshape(B_, S, cfg.nheads, cfg.head_dim)
+    xh_dt = xh * dt[..., None].astype(x.dtype)
+    y, _ = _ssd_chunked(xh_dt, dtA.astype(jnp.float32), Bm, Cm, cfg.chunk)
+    y = y + xh * p["D"].astype(x.dtype)[None, None, :, None]
+    y = y.reshape(B_, S, cfg.d_inner)
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z))
+    return linear(p["out_proj"], y)
+
+
+def ssm_decode(p, cfg: SSMCfg, x, conv_state, ssm_state):
+    """One-token decode. x: (B,1,d_model). conv_state: (B, K-1, conv_dim);
+    ssm_state: (B, H, P, N). Returns (y, conv_state, ssm_state)."""
+    B_ = x.shape[0]
+    zxbcdt = linear(p["in_proj"], x)[:, 0]                       # (B, ·)
+    z, xr, Bm, Cm, dt = jnp.split(
+        zxbcdt,
+        [cfg.d_inner, 2 * cfg.d_inner, 2 * cfg.d_inner + cfg.d_state,
+         2 * cfg.d_inner + 2 * cfg.d_state], axis=-1)
+    xbc = jnp.concatenate([xr, Bm, Cm], axis=-1)                 # (B, conv_dim)
+    window = jnp.concatenate([conv_state, xbc[:, None]], axis=1)  # (B, K, C)
+    conv_state = window[:, 1:]
+    w = p["conv_w"].astype(x.dtype)
+    xbc = jax.nn.silu(jnp.einsum("bkc,kc->bc", window, w) + p["conv_b"].astype(x.dtype))
+    xr, Bm, Cm = jnp.split(xbc, [cfg.d_inner, cfg.d_inner + cfg.d_state], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))  # (B,H)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    da = jnp.exp(dt * A)                                         # (B,H)
+    xh = xr.reshape(B_, cfg.nheads, cfg.head_dim)
+    upd = jnp.einsum("bh,bhp,bn->bhpn", dt.astype(x.dtype), xh, Bm)
+    ssm_state = ssm_state * da[..., None, None].astype(x.dtype) + upd
+    y = jnp.einsum("bhpn,bn->bhp", ssm_state, Cm)
+    y = y + xh * p["D"].astype(x.dtype)[None, :, None]
+    y = y.reshape(B_, 1, cfg.d_inner)
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z[:, None]))
+    return linear(p["out_proj"], y), conv_state, ssm_state

@@ -1,0 +1,3 @@
+from .adamw import adamw_init, adamw_update, clip_by_global_norm
+from .schedules import cosine_schedule, linear_warmup_cosine
+from .compress import ef_compress_update, topk_compress, topk_decompress

@@ -1,0 +1,35 @@
+"""Gradient compression for the pod-crossing all-reduce.
+
+Top-k sparsification with error feedback (Stich et al.): only the k largest-
+magnitude entries of each gradient leaf cross the slow inter-pod link; the
+residual is accumulated locally and added back next step, which preserves
+convergence. Values+indices are what a real deployment would all-gather over
+the `pod` axis — compressing the inter-pod traffic by ~d/k.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def topk_compress(g, frac=0.01):
+    """g: any-shape array -> (values, idx, shape). Keeps max(1, frac*size)."""
+    flat = g.reshape(-1)
+    k = max(1, int(frac * flat.size))
+    vals, idx = jax.lax.top_k(jnp.abs(flat), k)
+    vals = flat[idx]
+    return vals, idx, g.shape
+
+
+def topk_decompress(vals, idx, shape, dtype=None):
+    flat = jnp.zeros((int(jnp.prod(jnp.array(shape))),),
+                     dtype or vals.dtype).at[idx].set(vals)
+    return flat.reshape(shape)
+
+
+def ef_compress_update(g, err, frac=0.01):
+    """Error-feedback step: compress (g + err); return (sparse g, new err)."""
+    corrected = g + err
+    vals, idx, shape = topk_compress(corrected, frac)
+    sparse = topk_decompress(vals, idx, shape, corrected.dtype)
+    return sparse, corrected - sparse

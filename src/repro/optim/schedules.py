@@ -1,0 +1,21 @@
+"""LR schedules."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_schedule(base_lr, total_steps, min_frac=0.1):
+    def fn(step):
+        t = jnp.minimum(step.astype(jnp.float32) / total_steps, 1.0)
+        return base_lr * (min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+    return fn
+
+
+def linear_warmup_cosine(base_lr, warmup_steps, total_steps, min_frac=0.05):
+    cos = cosine_schedule(base_lr, max(total_steps - warmup_steps, 1), min_frac)
+
+    def fn(step):
+        step = step.astype(jnp.float32)
+        warm = base_lr * step / max(warmup_steps, 1)
+        return jnp.where(step < warmup_steps, warm, cos(step - warmup_steps))
+    return fn

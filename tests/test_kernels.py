@@ -1,0 +1,116 @@
+"""Per-kernel allclose sweeps (Pallas interpret=True vs pure-jnp oracle)
+plus hypothesis property tests on the water-filling invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.flowsim import waterfill as waterfill_np
+from repro.kernels.bipartite.ops import bipartite_round
+from repro.kernels.bipartite.ref import bipartite_round_ref
+from repro.kernels.fused_gru.ops import gru_cell as gru_pallas
+from repro.kernels.fused_gru.ref import gru_cell_ref
+from repro.kernels.waterfill.ops import incidence, masked_rowmin, waterfill_tpu
+from repro.kernels.waterfill.ref import masked_rowmin_ref, waterfill_jnp
+
+
+# ------------------------------------------------------------- bipartite
+@pytest.mark.parametrize("SF,SL,G,P", [
+    (8, 16, 20, 4), (16, 48, 48, 8), (64, 128, 300, 8), (32, 64, 128, 6),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_bipartite_kernel_matches_ref(SF, SL, G, P, dtype):
+    rng = np.random.default_rng(SF * SL)
+    E = SF * P
+    f = jnp.asarray(rng.normal(size=(SF, G)), dtype)
+    l = jnp.asarray(rng.normal(size=(SL, G)), dtype)
+    edge_f = jnp.repeat(jnp.arange(SF), P)
+    edge_l = jnp.asarray(rng.integers(0, SL, E), jnp.int32)
+    edge_mask = jnp.asarray(rng.random(E) < 0.7, dtype)
+    wf = jnp.asarray(rng.normal(size=(2 * G, G)) * 0.1, dtype)
+    wl = jnp.asarray(rng.normal(size=(2 * G, G)) * 0.1, dtype)
+    bf = jnp.asarray(rng.normal(size=(G,)) * 0.1, dtype)
+    bl = jnp.zeros((G,), dtype)
+    rf, rl = bipartite_round_ref(f, l, edge_f, edge_l, edge_mask, wf, wl, bf, bl)
+    pf, plk = bipartite_round(f, l, edge_f, edge_l, edge_mask, wf, wl, bf, bl)
+    tol = 1e-4 if dtype == jnp.float32 else 1e-1
+    np.testing.assert_allclose(np.asarray(pf, np.float32),
+                               np.asarray(rf, np.float32), atol=tol, rtol=tol)
+    np.testing.assert_allclose(np.asarray(plk, np.float32),
+                               np.asarray(rl, np.float32), atol=tol, rtol=tol)
+
+
+# ------------------------------------------------------------- fused GRU
+@pytest.mark.parametrize("B,Din,H", [
+    (5, 7, 20), (16, 13, 64), (200, 13, 400), (64, 309, 400), (128, 128, 128),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gru_kernel_matches_ref(B, Din, H, dtype):
+    rng = np.random.default_rng(B * H)
+    x = jnp.asarray(rng.normal(size=(B, Din)), dtype)
+    h = jnp.asarray(rng.normal(size=(B, H)), dtype)
+    wi = jnp.asarray(rng.normal(size=(Din, 3 * H)) * 0.1, dtype)
+    wh = jnp.asarray(rng.normal(size=(H, 3 * H)) * 0.1, dtype)
+    bi = jnp.asarray(rng.normal(size=(3 * H,)) * 0.1, dtype)
+    bh = jnp.asarray(rng.normal(size=(3 * H,)) * 0.1, dtype)
+    r = gru_cell_ref(x, h, wi, wh, bi, bh)
+    p = gru_pallas(x, h, wi, wh, bi, bh)
+    tol = 1e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(p, np.float32),
+                               np.asarray(r, np.float32), atol=tol, rtol=tol)
+
+
+# ------------------------------------------------------------- waterfill
+@pytest.mark.parametrize("F,L", [(10, 8), (100, 40), (300, 64)])
+def test_waterfill_matches_numpy(F, L):
+    rng = np.random.default_rng(F)
+    cap = rng.uniform(1e9, 10e9, L)
+    paths = [rng.choice(L, size=rng.integers(1, 5), replace=False)
+             for _ in range(F)]
+    r_np = waterfill_np(cap, paths)
+    a = incidence(paths, L)
+    r_p = np.asarray(waterfill_tpu(a, jnp.asarray(cap)))
+    np.testing.assert_allclose(r_p, r_np, rtol=1e-5)
+
+
+def test_masked_rowmin_shapes():
+    rng = np.random.default_rng(0)
+    for F, L in [(7, 5), (128, 200), (129, 64)]:
+        a = jnp.asarray((rng.random((F, L)) < 0.4).astype(np.float32))
+        share = jnp.asarray(rng.uniform(1, 10, L), jnp.float32)
+        np.testing.assert_allclose(
+            np.asarray(masked_rowmin(a, share)),
+            np.asarray(masked_rowmin_ref(a, share)), rtol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 40), st.integers(2, 16), st.integers(0, 10_000))
+def test_waterfill_maxmin_properties(F, L, seed):
+    """Max-min invariants: feasibility, non-negativity, work conservation
+    (every flow is bottlenecked at some saturated link or its own share)."""
+    rng = np.random.default_rng(seed)
+    cap = rng.uniform(1e9, 10e9, L)
+    paths = [rng.choice(L, size=rng.integers(1, min(5, L + 1)), replace=False)
+             for _ in range(F)]
+    rates = waterfill_np(cap, paths)
+    assert (rates > 0).all()
+    load = np.zeros(L)
+    for p, r in zip(paths, rates):
+        load[p] += r
+    assert (load <= cap * (1 + 1e-6)).all(), "capacity violated"
+    # each flow traverses at least one (near-)saturated link = its bottleneck
+    for p, r in zip(paths, rates):
+        sat = load[p] >= cap[p] * (1 - 1e-6)
+        assert sat.any(), "flow not bottlenecked anywhere (not max-min)"
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 30), st.integers(0, 1000))
+def test_waterfill_single_link_fair_share(n, seed):
+    """n flows on one link -> everyone gets C/n exactly."""
+    cap = np.array([7e9])
+    paths = [np.array([0])] * n
+    rates = waterfill_np(cap, paths)
+    np.testing.assert_allclose(rates, 7e9 / n, rtol=1e-9)

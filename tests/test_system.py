@@ -1,0 +1,130 @@
+"""End-to-end behaviour tests for the m4 system: training reduces loss,
+inference beats flowSim on held-out workloads (fixed seeds), closed-loop
+adapters agree with ground truth, simulator invariants hold."""
+import copy
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.events import build_event_batch
+from repro.core.flowsim import run_flowsim
+from repro.core.model import M4Config
+from repro.core.simulate import simulate_open_loop
+from repro.core.training import train_m4
+from repro.data.traffic import sample_scenario
+from repro.net.packetsim import Flow, NetConfig, PacketSim
+from repro.net.topology import FatTree
+
+CFG = M4Config(hidden=64, gnn_dim=48, mlp_hidden=32, snap_flows=16,
+               snap_links=48)
+
+
+@pytest.fixture(scope="module")
+def trained():
+    batches, holdout = [], None
+    for seed in range(4):
+        sc = sample_scenario(seed, num_flows=80, synthetic=seed < 3)
+        trace = PacketSim(sc.topo, sc.config, seed=0).run(
+            copy.deepcopy(sc.generate()))
+        if seed < 3:
+            batches.append(build_event_batch(trace, CFG))
+        else:
+            holdout = (sc, trace)
+    state, hist = train_m4(batches, CFG, epochs=8, lr=1e-3,
+                           log=lambda *a: None)
+    return state, hist, holdout
+
+
+def test_training_reduces_loss(trained):
+    _, hist, _ = trained
+    assert hist[-1] < hist[0] * 0.9, f"loss did not decrease: {hist}"
+
+
+def test_m4_beats_flowsim_on_holdout(trained):
+    state, _, (sc, trace) = trained
+    gt = trace.slowdowns
+    res = simulate_open_loop(state.params, CFG, sc.topo, sc.config,
+                             sc.generate())
+    fs = run_flowsim(sc.topo, sc.generate())
+    e_m4 = np.nanmean(np.abs(res.slowdowns - gt) / gt)
+    e_fs = np.nanmean(np.abs(fs.slowdowns - gt) / gt)
+    assert np.isfinite(res.fcts).all(), "m4 failed to complete all flows"
+    assert e_m4 < e_fs, f"m4 ({e_m4:.3f}) should beat flowSim ({e_fs:.3f})"
+
+
+def test_closed_loop_adapters(trained):
+    from repro.core.closedloop import (FlowSimAdapter, M4Adapter,
+                                       PacketAdapter, make_backlog)
+    state, _, _ = trained
+    topo = FatTree(num_racks=4, hosts_per_rack=4, num_spines=2)
+    config = NetConfig(cc="dctcp")
+    backlog = make_backlog(topo, client_racks=1, flows_per_rack=10,
+                           size_dist="WebServer", seed=3)
+    gt = PacketAdapter(topo, config).run(backlog, 3)
+    fs = FlowSimAdapter(topo, config).run(backlog, 3)
+    m4 = M4Adapter(topo, config, state.params, CFG).run(backlog, 3)
+    assert gt.throughput > 0 and fs.throughput > 0 and m4.throughput > 0
+    assert np.isfinite(gt.completion_times).sum() == 10
+    assert np.isfinite(fs.completion_times).sum() == 10
+    assert np.isfinite(m4.completion_times).sum() == 10
+
+
+# ------------------------------------------------------------- invariants
+def test_packetsim_slowdowns_at_least_one():
+    sc = sample_scenario(11, num_flows=60)
+    trace = PacketSim(sc.topo, sc.config, seed=0).run(
+        copy.deepcopy(sc.generate()))
+    sl = trace.slowdowns
+    assert np.all(sl[np.isfinite(sl)] >= 0.99), sl.min()
+
+
+def test_flowsim_single_link_analytic():
+    """n equal flows sharing one path from t=0: max-min says everyone gets
+    C/n and finishes at n*size*8/C."""
+    topo = FatTree(num_racks=2, hosts_per_rack=2, num_spines=1)
+    n, size = 4, 100_000
+    flows = [Flow(fid=i, src=0, dst=1, size=size, t_arrival=0.0,
+                  path=topo.path(0, 1, 0)) for i in range(n)]
+    res = run_flowsim(topo, flows)
+    expect = n * size * 8.0 / 10e9
+    np.testing.assert_allclose(res.fcts, expect, rtol=1e-6)
+
+
+def test_event_batch_structure():
+    sc = sample_scenario(5, num_flows=50)
+    trace = PacketSim(sc.topo, sc.config, seed=0).run(
+        copy.deepcopy(sc.generate()))
+    b = build_event_batch(trace, CFG)
+    assert len(b.t) == len(trace.events)
+    # slot 0 of every snapshot is the event flow
+    np.testing.assert_array_equal(b.snap_f[:, 0], b.fid)
+    assert (b.snap_f_mask[:, 0] == 1).all()
+    assert (b.gt_remaining >= 0).all() and (b.gt_remaining <= 1.0 + 1e-6).all()
+    assert b.edge_l.max() < CFG.snap_links
+    assert (np.diff(b.t) >= -1e-9).all()
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(0, 10_000))
+def test_packetsim_deterministic(seed):
+    sc = sample_scenario(seed % 7, num_flows=30)
+    t1 = PacketSim(sc.topo, sc.config, seed=1).run(
+        copy.deepcopy(sc.generate()))
+    t2 = PacketSim(sc.topo, sc.config, seed=1).run(
+        copy.deepcopy(sc.generate()))
+    np.testing.assert_array_equal(t1.fcts, t2.fcts)
+
+
+def test_m4_closed_loop_inflight_sensitivity(trained):
+    """Closed-loop m4 responds sensibly to the inflight budget."""
+    from repro.core.closedloop import M4Adapter, make_backlog
+    state, _, _ = trained
+    topo = FatTree(num_racks=4, hosts_per_rack=4, num_spines=2)
+    config = NetConfig(cc="dctcp")
+    backlog = make_backlog(topo, client_racks=1, flows_per_rack=8,
+                           size_dist="WebServer", seed=5)
+    t1 = M4Adapter(topo, config, state.params, CFG).run(backlog, 1).throughput
+    t7 = M4Adapter(topo, config, state.params, CFG).run(backlog, 7).throughput
+    assert t7 > t1 * 0.5
