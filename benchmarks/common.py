@@ -1,21 +1,19 @@
 """Shared benchmark infrastructure: scenario pools, one trained m4 artifact
-(cached on disk), error metrics."""
+(cached on disk), error metrics. All simulator access goes through the
+unified `repro.sim` backend API."""
 from __future__ import annotations
 
-import copy
 import os
 import time
 
 import numpy as np
 
 from repro.core.events import build_event_batch
-from repro.core.flowsim import run_flowsim
 from repro.core.model import M4Config
-from repro.core.simulate import simulate_open_loop
 from repro.core.training import train_m4
 from repro.data.traffic import Scenario, sample_scenario
-from repro.net.packetsim import PacketSim
 from repro.runtime import checkpoint as ckpt
+from repro.sim import SimRequest, get_backend
 
 # CI-scale m4 (paper: hidden=400, gnn=300, mlp=200 — same structure)
 BENCH_M4 = M4Config(hidden=96, gnn_dim=64, mlp_hidden=64,
@@ -28,8 +26,11 @@ EPOCHS = 10
 
 
 def ground_truth(sc: Scenario):
-    return PacketSim(sc.topo, sc.config, seed=0).run(
-        copy.deepcopy(sc.generate()))
+    """Packet-level Trace (the backend-native object training consumes).
+    The Trace always carries its event records, so the SimResult-level
+    event log (record_events=True) isn't needed here."""
+    req = SimRequest.from_scenario(sc)
+    return get_backend("packet").run(req).raw
 
 
 def trained_m4(force=False, log=print):
@@ -53,23 +54,27 @@ def trained_m4(force=False, log=print):
     return state.params, cfg
 
 
+def slowdown_errors(gt: np.ndarray, result) -> dict:
+    """Per-flow relative slowdown error summary for one SimResult."""
+    e = np.abs(result.slowdowns - gt) / gt
+    return {"mean": float(np.nanmean(e)),
+            "p90": float(np.nanpercentile(e, 90)),
+            "tail_sldn": float(np.nanpercentile(result.slowdowns, 99))}
+
+
 def eval_scenario(params, cfg, sc: Scenario, trace=None):
     """Returns dict of per-flow slowdown errors + wallclocks."""
     trace = trace or ground_truth(sc)
     gt = trace.slowdowns
-    flows = sc.generate()
-    t0 = time.perf_counter()
-    fs = run_flowsim(sc.topo, copy.deepcopy(flows))
-    m4 = simulate_open_loop(params, cfg, sc.topo, sc.config, flows)
-    e_fs = np.abs(fs.slowdowns - gt) / gt
-    e_m4 = np.abs(m4.slowdowns - gt) / gt
+    req = SimRequest.from_scenario(sc)
+    fs = get_backend("flowsim").run(req)
+    m4 = get_backend("m4", params=params, cfg=cfg).run(req)
+    e_fs, e_m4 = slowdown_errors(gt, fs), slowdown_errors(gt, m4)
     return {
-        "flowsim_mean": float(np.nanmean(e_fs)),
-        "flowsim_p90": float(np.nanpercentile(e_fs, 90)),
-        "m4_mean": float(np.nanmean(e_m4)),
-        "m4_p90": float(np.nanpercentile(e_m4, 90)),
+        "flowsim_mean": e_fs["mean"], "flowsim_p90": e_fs["p90"],
+        "m4_mean": e_m4["mean"], "m4_p90": e_m4["p90"],
         "gt_tail_sldn": float(np.nanpercentile(gt, 99)),
-        "fs_tail_sldn": float(np.nanpercentile(fs.slowdowns, 99)),
-        "m4_tail_sldn": float(np.nanpercentile(m4.slowdowns, 99)),
-        "t_flowsim": fs.wallclock, "t_m4": m4.wallclock,
+        "fs_tail_sldn": e_fs["tail_sldn"],
+        "m4_tail_sldn": e_m4["tail_sldn"],
+        "t_flowsim": fs.wall_time, "t_m4": m4.wall_time,
     }

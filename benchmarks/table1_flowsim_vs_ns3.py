@@ -1,17 +1,15 @@
 """Paper Table 1: packet-level (ns-3 stand-in) vs flowSim — wallclock,
 per-flow slowdown error, tail slowdown. Three scenarios mirroring the
-paper's (CacheFollower/DCTCP, Hadoop/TIMELY, Hadoop/DCTCP 1-to-1)."""
+paper's (CacheFollower/DCTCP, Hadoop/TIMELY, Hadoop/DCTCP 1-to-1).
+Both simulators run through `repro.sim.get_backend`."""
 from __future__ import annotations
-
-import copy
-import time
 
 import numpy as np
 
-from repro.core.flowsim import run_flowsim
 from repro.data.traffic import Scenario
-from repro.net.packetsim import NetConfig, PacketSim
+from repro.net.packetsim import NetConfig
 from repro.net.topology import paper_train_topo
+from repro.sim import SimRequest, get_backend
 
 
 def scenarios(num_flows):
@@ -33,25 +31,24 @@ def scenarios(num_flows):
 
 def run(num_flows=400, log=print):
     rows = []
+    packet, flowsim = get_backend("packet"), get_backend("flowsim")
     log("scenario, t_ns3_s, t_flowsim_s, speedup, err_mean, err_p90, "
         "tail_ns3, tail_flowsim")
     for name, sc in scenarios(num_flows):
-        t0 = time.perf_counter()
-        trace = PacketSim(sc.topo, sc.config, seed=0).run(
-            copy.deepcopy(sc.generate()))
-        t_ns3 = time.perf_counter() - t0
-        gt = trace.slowdowns
-        fs = run_flowsim(sc.topo, sc.generate())
+        req = SimRequest.from_scenario(sc)
+        gt_res = packet.run(req)
+        gt = gt_res.slowdowns
+        fs = flowsim.run(req)
         err = np.abs(fs.slowdowns - gt) / gt
         row = dict(
-            scenario=name, t_ns3=t_ns3, t_flowsim=fs.wallclock,
-            speedup=t_ns3 / max(fs.wallclock, 1e-9),
+            scenario=name, t_ns3=gt_res.wall_time, t_flowsim=fs.wall_time,
+            speedup=gt_res.wall_time / max(fs.wall_time, 1e-9),
             err_mean=float(np.nanmean(err)),
             err_p90=float(np.nanpercentile(err, 90)),
             tail_ns3=float(np.nanpercentile(gt, 99)),
             tail_fs=float(np.nanpercentile(fs.slowdowns, 99)))
         rows.append(row)
-        log(f"{name}, {t_ns3:.2f}, {fs.wallclock:.3f}, "
+        log(f"{name}, {row['t_ns3']:.2f}, {fs.wall_time:.3f}, "
             f"{row['speedup']:.0f}x, {row['err_mean']:.3f}, "
             f"{row['err_p90']:.3f}, {row['tail_ns3']:.2f}, {row['tail_fs']:.2f}")
     return rows

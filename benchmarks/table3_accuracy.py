@@ -1,19 +1,20 @@
 """Paper Table 3 + Figures 6-8: m4 vs flowSim accuracy on held-out
 empirical workloads (CacheFollower / WebServer / Hadoop), plus runtime.
-Also emits the per-slowdown-bucket error breakdown (Fig. 8)."""
-from __future__ import annotations
+Also emits the per-slowdown-bucket error breakdown (Fig. 8).
 
-import copy
+All three workloads are evaluated through `repro.sim`: flowSim per
+request, m4 as ONE `run_many` batch (a single vmapped compile over the
+whole sweep instead of a retrace per workload)."""
+from __future__ import annotations
 
 import numpy as np
 
-from repro.core.flowsim import run_flowsim
-from repro.core.simulate import simulate_open_loop
 from repro.data.traffic import Scenario
 from repro.net.packetsim import NetConfig
 from repro.net.topology import paper_train_topo
+from repro.sim import SimRequest, get_backend
 
-from .common import eval_scenario, ground_truth, trained_m4
+from .common import ground_truth, slowdown_errors, trained_m4
 
 
 def scenarios(num_flows):
@@ -28,23 +29,39 @@ def scenarios(num_flows):
 
 def run(num_flows=300, log=print):
     params, cfg = trained_m4(log=log)
+    named = scenarios(num_flows)
+    reqs = [SimRequest.from_scenario(sc) for _, sc in named]
+    traces = [ground_truth(sc) for _, sc in named]
+
+    flowsim = get_backend("flowsim")
+    fs_results = [flowsim.run(r) for r in reqs]
+    # one compiled vmapped scan across every workload in the sweep
+    m4_results = get_backend("m4", params=params, cfg=cfg).run_many(reqs)
+
     rows = []
     log("workload, method, err_mean, err_p90, tail_sldn, time_s")
     buckets_all = {}
-    for name, sc in scenarios(num_flows):
-        trace = ground_truth(sc)
-        r = eval_scenario(params, cfg, sc, trace)
-        rows.append({"workload": name, **r})
+    for (name, sc), trace, fsr, m4r in zip(named, traces, fs_results,
+                                           m4_results):
+        gt = trace.slowdowns
+        e_fs, e_m4 = slowdown_errors(gt, fsr), slowdown_errors(gt, m4r)
+        r = {
+            "workload": name,
+            "flowsim_mean": e_fs["mean"], "flowsim_p90": e_fs["p90"],
+            "m4_mean": e_m4["mean"], "m4_p90": e_m4["p90"],
+            "gt_tail_sldn": float(np.nanpercentile(gt, 99)),
+            "fs_tail_sldn": e_fs["tail_sldn"],
+            "m4_tail_sldn": e_m4["tail_sldn"],
+            "t_flowsim": fsr.wall_time, "t_m4": m4r.wall_time,
+        }
+        rows.append(r)
         log(f"{name}, flowSim, {r['flowsim_mean']:.3f}, {r['flowsim_p90']:.3f},"
             f" {r['fs_tail_sldn']:.2f}, {r['t_flowsim']:.2f}")
         log(f"{name}, m4,      {r['m4_mean']:.3f}, {r['m4_p90']:.3f},"
             f" {r['m4_tail_sldn']:.2f}, {r['t_m4']:.2f}")
         log(f"{name}, ns3-gt,  -, -, {r['gt_tail_sldn']:.2f}, -")
 
-        # Fig 8: error by slowdown bucket
-        gt = trace.slowdowns
-        m4r = simulate_open_loop(params, cfg, sc.topo, sc.config, sc.generate())
-        fsr = run_flowsim(sc.topo, sc.generate())
+        # Fig 8: error by slowdown bucket (reuses the batch results)
         edges = [1.0, 1.5, 2.0, 3.0, 5.0, np.inf]
         for lo, hi in zip(edges[:-1], edges[1:]):
             m = (gt >= lo) & (gt < hi)

@@ -2,25 +2,24 @@
 and flow count and compare flowSim's event loop against m4's fixed-size
 jitted event step (the paper's speedup comes from constant-cost GPU steps
 vs flowSim's O(active-flows) waterfilling; the same structure shows here).
-Also reports events/sec so the trend is hardware-independent."""
+Also reports events/sec so the trend is hardware-independent.
+
+Simulators run through `repro.sim.get_backend`; sizes differ per row so
+each row is its own compile (use `run_many` for same-shape sweeps)."""
 from __future__ import annotations
 
-import copy
-import time
-
-import numpy as np
-
-from repro.core.flowsim import run_flowsim
-from repro.core.simulate import simulate_open_loop
 from repro.data.traffic import Scenario
 from repro.net.packetsim import NetConfig
 from repro.net.topology import FatTree
+from repro.sim import SimRequest, get_backend
 
 from .common import trained_m4
 
 
 def run(sizes=((8, 4), (16, 8), (32, 8), (64, 16)), flows_base=150, log=print):
     params, cfg = trained_m4(log=log)
+    flowsim = get_backend("flowsim")
+    m4 = get_backend("m4", params=params, cfg=cfg)
     log("racks, hosts, flows, t_flowsim_s, t_m4_s, ratio, m4_events_per_s")
     rows = []
     for racks, hpr in sizes:
@@ -30,14 +29,14 @@ def run(sizes=((8, 4), (16, 8), (32, 8), (64, 16)), flows_base=150, log=print):
         sc = Scenario(topo=topo, config=NetConfig(cc="dctcp"),
                       size_dist="WebServer", max_load=0.5, sigma=1.0,
                       matrix="A", num_flows=n, seed=300 + racks)
-        flows = sc.generate()
-        fs = run_flowsim(topo, copy.deepcopy(flows))
-        res = simulate_open_loop(params, cfg, topo, sc.config, flows)
+        req = SimRequest.from_scenario(sc)
+        fs = flowsim.run(req)
+        res = m4.run(req)
         rows.append(dict(racks=racks, hosts=topo.num_hosts, flows=n,
-                         t_flowsim=fs.wallclock, t_m4=res.wallclock))
-        log(f"{racks}, {topo.num_hosts}, {n}, {fs.wallclock:.2f}, "
-            f"{res.wallclock:.2f}, {fs.wallclock/res.wallclock:.2f}x, "
-            f"{2*n/res.wallclock:.0f}")
+                         t_flowsim=fs.wall_time, t_m4=res.wall_time))
+        log(f"{racks}, {topo.num_hosts}, {n}, {fs.wall_time:.2f}, "
+            f"{res.wall_time:.2f}, {fs.wall_time/res.wall_time:.2f}x, "
+            f"{2*n/res.wall_time:.0f}")
     return rows
 
 

@@ -4,7 +4,10 @@ Client racks keep at most N requests inflight to storage racks; each
 completion releases the next request. Throughput (completed flows/sec) is
 compared across the packet-level ground truth, flowSim, and m4 — the
 regime where flowSim's missing queueing/CC dynamics compound, because
-errors feed back into arrival times.
+errors feed back into arrival times. All three run through the same
+`repro.sim` closed-loop session protocol:
+
+    run_closed_loop(get_backend("m4", params=p, cfg=c), topo, cfg, backlog, N)
 
   PYTHONPATH=src python examples/closed_loop.py [--racks 8] [--limits 1 3 5]
 """
@@ -17,10 +20,10 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 import numpy as np
 
 from benchmarks.common import trained_m4
-from repro.core.closedloop import (FlowSimAdapter, M4Adapter, PacketAdapter,
-                                   make_backlog)
+from repro.core.closedloop import make_backlog
 from repro.net.packetsim import NetConfig
 from repro.net.topology import FatTree
+from repro.sim import get_backend, run_closed_loop
 
 
 def main():
@@ -37,12 +40,14 @@ def main():
                            flows_per_rack=args.flows_per_rack,
                            size_dist="WebServer", seed=7)
 
+    backends = [get_backend("packet"), get_backend("flowsim"),
+                get_backend("m4", params=params, cfg=m4cfg)]
+
     print("N, thr_ns3(f/s), thr_flowsim, thr_m4, err_flowsim, err_m4")
     errs_fs, errs_m4 = [], []
     for N in args.limits:
-        gt = PacketAdapter(topo, config).run(backlog, N)
-        fs = FlowSimAdapter(topo, config).run(backlog, N)
-        m4 = M4Adapter(topo, config, params, m4cfg).run(backlog, N)
+        gt, fs, m4 = (run_closed_loop(b, topo, config, backlog, N)
+                      for b in backends)
         e_fs = abs(fs.throughput - gt.throughput) / gt.throughput
         e_m4 = abs(m4.throughput - gt.throughput) / gt.throughput
         errs_fs.append(e_fs)

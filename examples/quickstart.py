@@ -6,20 +6,22 @@
 4. Evaluate per-flow FCT-slowdown error on a held-out empirical workload,
    against the flowSim baseline.
 
+Every simulator runs through the unified `repro.sim` backend API:
+
+    req = SimRequest.from_scenario(sc)
+    res = get_backend("m4", params=params, cfg=cfg).run(req)
+
   PYTHONPATH=src python examples/quickstart.py [--flows 100] [--sims 4]
 """
 import argparse
-import copy
 
 import numpy as np
 
 from repro.core.events import build_event_batch
-from repro.core.flowsim import run_flowsim
 from repro.core.model import M4Config
-from repro.core.simulate import simulate_open_loop
 from repro.core.training import train_m4
 from repro.data.traffic import sample_scenario
-from repro.net.packetsim import PacketSim
+from repro.sim import SimRequest, get_backend
 
 
 def main():
@@ -31,18 +33,19 @@ def main():
 
     cfg = M4Config(hidden=64, gnn_dim=48, mlp_hidden=32,
                    snap_flows=16, snap_links=48)
+    packet = get_backend("packet")
 
     print("== generating ground truth (packet-level DES) ==")
     batches, holdout = [], None
     for seed in range(args.sims + 1):
         sc = sample_scenario(seed, num_flows=args.flows,
                              synthetic=seed < args.sims)
-        trace = PacketSim(sc.topo, sc.config, seed=0).run(
-            copy.deepcopy(sc.generate()))
+        req = SimRequest.from_scenario(sc)
+        trace = packet.run(req).raw
         if seed < args.sims:
             batches.append(build_event_batch(trace, cfg))
         else:
-            holdout = (sc, trace)
+            holdout = (req, trace)
         print(f"  sim {seed}: cc={sc.config.cc} load={sc.max_load:.2f} "
               f"mean_sldn={np.nanmean(trace.slowdowns):.2f}")
 
@@ -50,11 +53,10 @@ def main():
     state, hist = train_m4(batches, cfg, epochs=args.epochs, lr=1e-3)
 
     print("== held-out evaluation ==")
-    sc, trace = holdout
+    req, trace = holdout
     gt = trace.slowdowns
-    res = simulate_open_loop(state.params, cfg, sc.topo, sc.config,
-                             sc.generate())
-    fs = run_flowsim(sc.topo, sc.generate())
+    res = get_backend("m4", params=state.params, cfg=cfg).run(req)
+    fs = get_backend("flowsim").run(req)
     e_m4 = np.abs(res.slowdowns - gt) / gt
     e_fs = np.abs(fs.slowdowns - gt) / gt
     print(f"  flowSim err: mean={np.nanmean(e_fs):.3f} "

@@ -21,10 +21,9 @@ import json
 import numpy as np
 
 from benchmarks.common import trained_m4
-from repro.core.flowsim import run_flowsim
-from repro.core.simulate import simulate_open_loop
 from repro.net.packetsim import Flow, NetConfig
 from repro.net.topology import FatTree
+from repro.sim import SimRequest, get_backend
 
 
 def ring_flows(topo, ranks, bytes_per_rank, start=0.0):
@@ -69,8 +68,9 @@ def main():
         # alpha-beta: steps * (alpha + chunk/bw)
         bw = topo.link_gbps * 1e9 / 8
         t_ab = steps * (2e-6 + chunk / bw)
-        fs = run_flowsim(topo, [Flow(**vars(f)) for f in flows])
-        m4 = simulate_open_loop(params, m4cfg, topo, config, flows)
+        req = SimRequest(topo=topo, config=config, flows=tuple(flows))
+        fs = get_backend("flowsim").run(req)
+        m4 = get_backend("m4", params=params, cfg=m4cfg).run(req)
         print(f"{kind}, {nbytes/1e6:.1f}MB, {t_ab*1e6:.0f}, "
               f"{np.nanmax(fs.fcts)*1e6:.0f}, {np.nanmax(m4.fcts)*1e6:.0f}")
     print("[collectives] flowSim models contention the alpha-beta bound "

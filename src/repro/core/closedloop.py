@@ -1,152 +1,26 @@
 """Closed-loop traffic (§5.4): per-rack inflight limit N; a new flow may
-only start when an earlier flow of the same rack completes. The driver is
-simulator-agnostic — adapters wrap the packet-level ground truth, flowSim,
-and m4, all consuming arrivals dynamically (this is the capability that
-trace-fixed learned simulators lack)."""
-from __future__ import annotations
+only start when an earlier flow of the same rack completes.
 
-import copy
-from dataclasses import dataclass
-from typing import List
+The simulator-specific adapter classes that used to live here are gone —
+all simulator access goes through `repro.sim`: each backend opens a
+`ClosedLoopSession` and the generic `run_closed_loop` driver (re-exported
+below) handles the backlog/release logic once:
+
+    from repro.core.closedloop import make_backlog, run_closed_loop
+    from repro.sim import get_backend
+
+    res = run_closed_loop(get_backend("packet"), topo, config, backlog, N)
+
+This module keeps the workload generator (`make_backlog`).
+"""
+from __future__ import annotations
 
 import numpy as np
 
-from ..net.packetsim import Flow, PacketSim
-from .flowsim import waterfill
-from .simulate import M4Simulator
+from ..net.packetsim import Flow
+from ..sim.closedloop import ClosedLoopResult, run_closed_loop  # noqa: F401
 
-
-@dataclass
-class ClosedLoopResult:
-    completion_times: np.ndarray   # per flow (NaN if never started)
-    makespan: float
-    throughput: float              # completed flows / sec
-
-
-# ------------------------------------------------------------------ adapters
-class PacketAdapter:
-    """Ground truth: run the DES, injecting follow-ups via completion hook."""
-
-    def __init__(self, topo, config):
-        self.topo, self.config = topo, config
-
-    def run(self, backlog: List[List[Flow]], inflight: int) -> ClosedLoopResult:
-        flows = [f for rack in backlog for f in rack]
-        flows = sorted(copy.deepcopy(flows), key=lambda f: f.fid)
-        sim = PacketSim(self.topo, self.config, seed=0)
-        queues = [[f.fid for f in rack] for rack in backlog]
-        rack_of = {}
-        for r, rack in enumerate(backlog):
-            for f in rack:
-                rack_of[f.fid] = r
-        ptr = [min(inflight, len(q)) for q in queues]
-
-        orig_complete = sim._complete
-
-        def complete_hook(t, f):
-            orig_complete(t, f)
-            r = rack_of[f.fid]
-            if ptr[r] < len(queues[r]):
-                nxt = queues[r][ptr[r]]
-                ptr[r] += 1
-                sim.flows[nxt].t_arrival = t
-                sim._push(t, "arrival", nxt)
-        sim._complete = complete_hook
-
-        initial = [fid for r, q in enumerate(queues) for fid in q[:ptr[r]]]
-        for f in flows:
-            f.t_arrival = 0.0
-        trace = sim.run_subset(flows, initial)
-        ct = np.array([f.t_done if f.done else np.nan for f in trace.flows])
-        mk = np.nanmax(ct)
-        done = np.isfinite(ct).sum()
-        return ClosedLoopResult(ct, mk, done / mk)
-
-
-class FlowSimAdapter:
-    """Closed-loop flowSim: max-min rates, dynamic arrivals on completion."""
-
-    def __init__(self, topo, config):
-        self.topo = topo
-
-    def run(self, backlog, inflight) -> ClosedLoopResult:
-        flows = {f.fid: f for rack in backlog for f in rack}
-        queues = [[f.fid for f in rack] for rack in backlog]
-        rack_of = {f.fid: r for r, rack in enumerate(backlog) for f in rack}
-        ptr = [0] * len(queues)
-        active, remaining, t = [], {}, 0.0
-        ct = np.full(max(flows) + 1, np.nan)
-
-        def release(r, now):
-            if ptr[r] < len(queues[r]):
-                fid = queues[r][ptr[r]]
-                ptr[r] += 1
-                active.append(fid)
-                remaining[fid] = flows[fid].size * 8.0
-
-        for r in range(len(queues)):
-            for _ in range(min(inflight, len(queues[r]))):
-                release(r, 0.0)
-
-        while active:
-            rates = waterfill(self.topo.capacity,
-                              [np.asarray(flows[i].path, np.int64)
-                               for i in active])
-            tta = np.array([remaining[i] for i in active]) / np.maximum(rates, 1e-9)
-            k = int(np.argmin(tta))
-            dt = tta[k]
-            t += dt
-            for i, fid in enumerate(active):
-                remaining[fid] -= rates[i] * dt
-            fid = active.pop(k)
-            remaining.pop(fid)
-            ct[fid] = t
-            release(rack_of[fid], t)
-        mk = np.nanmax(ct)
-        return ClosedLoopResult(ct, mk, np.isfinite(ct).sum() / mk)
-
-
-class M4Adapter:
-    """Closed-loop m4: arrival injection + committed predicted departures."""
-
-    def __init__(self, topo, config, params, m4cfg):
-        self.topo, self.config = topo, config
-        self.params, self.m4cfg = params, m4cfg
-
-    def run(self, backlog, inflight) -> ClosedLoopResult:
-        flows = sorted([f for rack in backlog for f in rack],
-                       key=lambda f: f.fid)
-        sim = M4Simulator(self.params, self.m4cfg, self.topo, self.config,
-                          flows)
-        queues = [[f.fid for f in rack] for rack in backlog]
-        rack_of = {f.fid: r for r, rack in enumerate(backlog) for f in rack}
-        ptr = [0] * len(queues)
-
-        def release(r, now):
-            if ptr[r] < len(queues[r]):
-                fid = queues[r][ptr[r]]
-                ptr[r] += 1
-                sim.inject_arrival(fid, now)
-
-        for r in range(len(queues)):
-            for _ in range(min(inflight, len(queues[r]))):
-                release(r, 0.0)
-
-        n_total = len(flows)
-        done = 0
-        while done < n_total:
-            t_dep, fid = sim.next_departure()
-            if fid is None:
-                break
-            sim.commit_departure(fid, t_dep)
-            done += 1
-            release(rack_of[fid], t_dep)
-        ct = np.where(np.isfinite(sim.fcts), sim.fcts, np.nan)
-        # completion time = arrival + fct; arrivals tracked in sim state
-        arr = np.asarray(sim.state["t_arr"])[:sim.N]
-        ctime = arr + ct
-        mk = np.nanmax(ctime)
-        return ClosedLoopResult(ctime, mk, np.isfinite(ctime).sum() / mk)
+__all__ = ["ClosedLoopResult", "run_closed_loop", "make_backlog"]
 
 
 def make_backlog(topo, *, client_racks, flows_per_rack, size_dist, seed=0):

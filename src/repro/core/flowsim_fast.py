@@ -5,19 +5,26 @@ with the per-round masked row-min available as the Pallas kernel
 accelerator-friendly execution model that m4's learned step enjoys — the
 paper's Table-4 scaling argument applied back to the baseline.
 
+`run_flowsim_fast_batch` pads B scenarios to one incidence shape and vmaps
+the scan, so a benchmark sweep costs one compile instead of B (exposed as
+`repro.sim.get_backend("flowsim_fast").run_many`).
+
 Equivalence with the numpy event-driven reference is tested in
-tests/test_flowsim_fast.py.
+tests/test_flowsim_fast.py; batched-vs-looped in tests/test_sim_api.py.
 """
 from __future__ import annotations
 
 import time
-from functools import partial
+from collections import Counter
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 BIG = 1e30
+
+# compile counters (incremented at trace time only — see simulate.TRACE_COUNTS)
+TRACE_COUNTS = Counter()
 
 
 def _waterfill_masked(a, cap, active, *, max_rounds=32):
@@ -48,8 +55,7 @@ def _waterfill_masked(a, cap, active, *, max_rounds=32):
     return jnp.where(active, rates, 0.0)
 
 
-@partial(jax.jit, static_argnums=())
-def _event_scan(a, cap, sizes_bits, arr_times, arr_order):
+def _event_scan_core(a, cap, sizes_bits, arr_times, arr_order):
     N = sizes_bits.shape[0]
 
     def body(carry, _):
@@ -80,24 +86,72 @@ def _event_scan(a, cap, sizes_bits, arr_times, arr_order):
     return fct  # completion TIMES (absolute); caller subtracts arrivals
 
 
-def run_flowsim_fast(topo, flows):
-    """Drop-in fast path for `run_flowsim` (fcts + slowdowns only)."""
-    N = len(flows)
-    a = np.zeros((N, topo.num_links), np.float32)
+@jax.jit
+def _event_scan(a, cap, sizes_bits, arr_times, arr_order):
+    TRACE_COUNTS["event_scan"] += 1
+    return _event_scan_core(a, cap, sizes_bits, arr_times, arr_order)
+
+
+@jax.jit
+def _event_scan_batched(a, cap, sizes_bits, arr_times, arr_order):
+    TRACE_COUNTS["event_scan_batched"] += 1
+    return jax.vmap(_event_scan_core)(a, cap, sizes_bits, arr_times, arr_order)
+
+
+def _pack(topo, flows, n_total=None, l_total=None):
+    """Dense incidence + arrival schedule, optionally padded to shared shape.
+    Padded flows have empty paths and arrive at t=BIG (strictly after every
+    real event), padded links carry no flow."""
+    n = len(flows)
+    N = n if n_total is None else n_total
+    L = topo.num_links if l_total is None else l_total
+    a = np.zeros((N, L), np.float32)
     for f in flows:
         a[f.fid, f.path] = 1.0
-    sizes = np.array([float(f.size) * 8.0 for f in flows])
-    order = np.argsort([f.t_arrival for f in flows], kind="stable").astype(np.int32)
-    times = np.array([flows[i].t_arrival for i in order], np.float32)
-    t0 = time.perf_counter()
-    fct_abs = np.asarray(_event_scan(
-        jnp.asarray(a), jnp.asarray(topo.capacity), jnp.asarray(sizes),
-        jnp.asarray(times), jnp.asarray(order)))
-    wall = time.perf_counter() - t0
-    arr = np.array([f.t_arrival for f in flows])
-    fcts = fct_abs - arr
-    ideal = np.array([topo.ideal_fct(f.size, f.path) for f in flows])
+    sizes = np.full(N, 8.0)
+    sizes[:n] = [float(f.size) * 8.0 for f in flows]
+    cap = np.ones(L)
+    cap[:topo.num_links] = topo.capacity
+    t_arr = np.full(N, BIG, np.float32)
+    t_arr[:n] = [f.t_arrival for f in flows]
+    order = np.argsort(t_arr, kind="stable").astype(np.int32)
+    return a, cap, sizes, t_arr[order], order
+
+
+def _result(topo, flows, fct_abs, wall):
     from .flowsim import FlowSimResult
+    arr = np.array([f.t_arrival for f in flows])
+    fcts = fct_abs[:len(flows)] - arr
+    ideal = np.array([topo.ideal_fct(f.size, f.path) for f in flows])
     return FlowSimResult(fcts=fcts, slowdowns=fcts / ideal,
                          event_times=np.zeros(0), event_types=np.zeros(0),
                          event_fids=np.zeros(0), wallclock=wall)
+
+
+def run_flowsim_fast(topo, flows):
+    """Drop-in fast path for `run_flowsim` (fcts + slowdowns only)."""
+    a, cap, sizes, times, order = _pack(topo, flows)
+    t0 = time.perf_counter()
+    fct_abs = np.asarray(_event_scan(
+        jnp.asarray(a), jnp.asarray(cap), jnp.asarray(sizes),
+        jnp.asarray(times), jnp.asarray(order)))
+    wall = time.perf_counter() - t0
+    return _result(topo, flows, fct_abs, wall)
+
+
+def run_flowsim_fast_batch(scenarios):
+    """One vmapped compile over B (topo, flows) scenarios padded to the
+    largest flow/link count. Returns a list of FlowSimResult."""
+    scenarios = list(scenarios)
+    if not scenarios:
+        return []
+    n_max = max(len(flows) for _, flows in scenarios)
+    l_max = max(topo.num_links for topo, _ in scenarios)
+    packed = [_pack(topo, flows, n_total=n_max, l_total=l_max)
+              for topo, flows in scenarios]
+    stacked = [jnp.asarray(np.stack(col)) for col in zip(*packed)]
+    t0 = time.perf_counter()
+    fct_abs = np.asarray(_event_scan_batched(*stacked))
+    wall = time.perf_counter() - t0
+    return [_result(topo, flows, fct_abs[b], wall / len(scenarios))
+            for b, (topo, flows) in enumerate(scenarios)]

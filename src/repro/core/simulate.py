@@ -7,12 +7,19 @@ shapes) -> temporal GRU advance -> GNN spatial update -> departure-time
 re-prediction for affected flows.
 
 `simulate_open_loop` runs the whole trace as one `lax.scan` (2N events).
+`simulate_open_loop_batch` pads B scenarios to a shared arena shape and
+`jax.vmap`s the scan across them — one compiled call instead of B retraces
+(this is what `repro.sim.get_backend("m4").run_many` dispatches to).
 `M4Simulator` exposes a single-event step for closed-loop applications that
 inject flows dynamically (§5.4).
+
+Prefer the unified entry point `repro.sim.get_backend("m4")` over calling
+these functions directly.
 """
 from __future__ import annotations
 
 import time
+from collections import Counter
 from dataclasses import dataclass
 from functools import partial
 
@@ -25,6 +32,11 @@ from .model import (M4Config, predict_size, predict_sldn, spatial_update,
                     temporal_update)
 
 BIG = 1e30
+
+# Number of XLA traces per entry point. Python side effects inside a jitted
+# function run only while tracing, so these count *compiles*, not calls —
+# the batched-path test asserts run_many(B scenarios) costs exactly one.
+TRACE_COUNTS = Counter()
 
 
 def _build_snapshot(cfg: M4Config, flow_links, fid, active_mask):
@@ -152,8 +164,7 @@ def init_sim_state(params, cfg: M4Config, static, N, num_links: int):
                                jnp.zeros((1,))]))
 
 
-@partial(jax.jit, static_argnums=(1, 2))
-def _open_loop_scan(params, cfg: M4Config, num_links: int, static, arr_order,
+def _open_loop_core(params, cfg: M4Config, num_links: int, static, arr_order,
                     arr_times):
     N = arr_times.shape[0]
     step = make_event_step(cfg, static, num_links)
@@ -187,6 +198,27 @@ def _open_loop_scan(params, cfg: M4Config, num_links: int, static, arr_order,
     return state["fct"][:N], state["done"][:N]
 
 
+@partial(jax.jit, static_argnums=(1, 2))
+def _open_loop_scan(params, cfg: M4Config, num_links: int, static, arr_order,
+                    arr_times):
+    TRACE_COUNTS["open_loop"] += 1
+    return _open_loop_core(params, cfg, num_links, static, arr_order,
+                           arr_times)
+
+
+@partial(jax.jit, static_argnums=(1, 2))
+def _open_loop_scan_batched(params, cfg: M4Config, num_links: int, static,
+                            arr_order, arr_times):
+    """vmap of the open-loop scan over B scenarios padded to one arena shape.
+    Scenario axes: every leaf of `static`, plus arr_order/arr_times."""
+    TRACE_COUNTS["open_loop_batched"] += 1
+
+    def one(s, o, t):
+        return _open_loop_core(params, cfg, num_links, s, o, t)
+
+    return jax.vmap(one)(static, arr_order, arr_times)
+
+
 @dataclass
 class M4Result:
     fcts: np.ndarray
@@ -194,37 +226,97 @@ class M4Result:
     wallclock: float
 
 
-def make_static(topo, flows, net_config, cfg: M4Config):
-    N, P = len(flows), cfg.max_path
+def make_static(topo, flows, net_config, cfg: M4Config, n_total=None,
+                l_total=None):
+    """Arena constants for one scenario. `n_total`/`l_total` pad the flow and
+    link axes to a shared shape so scenarios can be stacked and vmapped:
+    padded flows have no links and arrive at t=BIG (after every real event,
+    so they only ever touch dump/own rows), padded links are on no path."""
+    P = cfg.max_path
+    n = len(flows)
+    N = n if n_total is None else n_total
+    L = topo.num_links if l_total is None else l_total
+    assert N >= n and L >= topo.num_links
     flow_links = np.full((N, P), -1, np.int32)
     for f in flows:
         flow_links[f.fid, :len(f.path)] = f.path[:P]
-    sizes = np.array([f.size for f in flows], np.float32)
+    sizes = np.zeros(N, np.float32)
+    sizes[:n] = [f.size for f in flows]
     nlinks = (flow_links >= 0).sum(1).astype(np.float32)
-    ideal = np.array([topo.ideal_fct(f.size, f.path) for f in flows], np.float32)
+    ideal = np.full(N, 1e-9, np.float32)
+    ideal[:n] = [topo.ideal_fct(f.size, f.path) for f in flows]
+    t_arrival = np.full(N, BIG, np.float32)
+    t_arrival[:n] = [f.t_arrival for f in flows]
     flow_feat = np.stack([np.log1p(sizes / 1e3) / 10.0, nlinks / 8.0,
                           np.log1p(ideal / 1e-6) / 10.0], -1)
+    cap = np.full(L, topo.capacity.max(), np.float64)
+    cap[:topo.num_links] = topo.capacity
     return {
         "flow_links": jnp.asarray(flow_links),
         "flow_feat": jnp.asarray(flow_feat, jnp.float32),
-        "link_feat": jnp.asarray(np.log1p(topo.capacity / 1e9)[:, None] / 10.0,
+        "link_feat": jnp.asarray(np.log1p(cap / 1e9)[:, None] / 10.0,
                                  jnp.float32),
         "ideal_fct": jnp.asarray(ideal),
-        "t_arrival": jnp.asarray([f.t_arrival for f in flows], jnp.float32),
+        "t_arrival": jnp.asarray(t_arrival),
         "cfg_vec": jnp.asarray(net_config.feature_vec()),
-    }, topo.num_links, ideal
+    }, L, ideal
+
+
+def _arrival_order(static):
+    """Stable arrival order over the (possibly padded) arena; padded flows
+    sit at t=BIG and therefore sort last."""
+    t = np.asarray(static["t_arrival"])
+    order = np.argsort(t, kind="stable").astype(np.int32)
+    return order, t[order].astype(np.float32)
 
 
 def simulate_open_loop(params, cfg: M4Config, topo, net_config, flows) -> M4Result:
     static, num_links, ideal = make_static(topo, flows, net_config, cfg)
-    order = np.argsort([f.t_arrival for f in flows], kind="stable").astype(np.int32)
-    times = np.array([flows[i].t_arrival for i in order], np.float32)
+    order, times = _arrival_order(static)
     t0 = time.perf_counter()
     fct, done = _open_loop_scan(params, cfg, num_links, static,
                                 jnp.asarray(order), jnp.asarray(times))
     fct = np.asarray(jax.block_until_ready(fct))
     wall = time.perf_counter() - t0
     return M4Result(fcts=fct, slowdowns=fct / ideal, wallclock=wall)
+
+
+def simulate_open_loop_batch(params, cfg: M4Config, scenarios) -> list:
+    """Run many scenarios in ONE compiled vmapped scan.
+
+    scenarios: sequence of (topo, net_config, flows). Arenas are padded to
+    the largest flow/link count in the batch; padded work is dead weight in
+    exchange for a single XLA program (no per-scenario retraces) and
+    batch-parallel execution of the event steps.
+    """
+    scenarios = list(scenarios)
+    if not scenarios:
+        return []
+    n_max = max(len(flows) for _, _, flows in scenarios)
+    l_max = max(topo.num_links for topo, _, _ in scenarios)
+    statics, orders, times, ideals, counts = [], [], [], [], []
+    for topo, net_config, flows in scenarios:
+        static, _, ideal = make_static(topo, flows, net_config, cfg,
+                                       n_total=n_max, l_total=l_max)
+        order, t = _arrival_order(static)
+        statics.append(static)
+        orders.append(order)
+        times.append(t)
+        ideals.append(ideal)
+        counts.append(len(flows))
+    batched = {k: jnp.stack([s[k] for s in statics]) for k in statics[0]}
+    t0 = time.perf_counter()
+    fct, done = _open_loop_scan_batched(
+        params, cfg, l_max, batched,
+        jnp.asarray(np.stack(orders)), jnp.asarray(np.stack(times)))
+    fct = np.asarray(jax.block_until_ready(fct))
+    wall = time.perf_counter() - t0
+    out = []
+    for b, n in enumerate(counts):
+        f = fct[b, :n]
+        out.append(M4Result(fcts=f, slowdowns=f / ideals[b][:n],
+                            wallclock=wall / len(scenarios)))
+    return out
 
 
 class M4Simulator:
@@ -268,3 +360,9 @@ class M4Simulator:
         self.state["done"] = self.state["done"].at[fid].set(True)
         self.state["t_dep"] = self.state["t_dep"].at[fid].set(BIG)
         self.fcts[fid] = t - float(self.state["t_arr"][fid])
+
+    def completion_times(self) -> np.ndarray:
+        """Absolute completion time per flow (NaN while unfinished) — the
+        `repro.sim` closed-loop session contract."""
+        arr = np.asarray(self.state["t_arr"])[:self.N]
+        return np.where(np.isfinite(self.fcts), arr + self.fcts, np.nan)

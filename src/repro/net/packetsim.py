@@ -117,6 +117,7 @@ class PacketSim:
         self.records: List[EventRecord] = []
         self.flows: List[Flow] = []
         self.active: Dict[int, Flow] = {}
+        self._completed_now: int | None = None
 
     # ---------------------------------------------------------------- events
     def _push(self, t, kind, data):
@@ -139,6 +140,23 @@ class PacketSim:
                 break
             getattr(self, f"_on_{kind}")(t, data)
         return Trace(self.topo, self.cfg, self.flows, self.records)
+
+    def run_until_completion(self):
+        """Advance the event loop until one flow completes.
+
+        Returns (t_done, fid), or (None, None) once the heap drains. This is
+        the incremental interface behind `repro.sim`'s closed-loop packet
+        session: the driver injects follow-up arrivals between calls.
+        """
+        self._completed_now = None
+        while self.events:
+            t, _, kind, data = heapq.heappop(self.events)
+            getattr(self, f"_on_{kind}")(t, data)
+            if self._completed_now is not None:
+                fid = self._completed_now
+                self._completed_now = None
+                return self.flows[fid].t_done, fid
+        return None, None
 
     # ---------------------------------------------------------------- hooks
     def _record(self, t, etype, fid, path_queues=None):
@@ -281,6 +299,7 @@ class PacketSim:
         f.t_done = t
         self.active.pop(f.fid, None)
         self._record(t, 1, f.fid)
+        self._completed_now = f.fid
 
     def _on_timeout(self, t, fid):
         f = self.flows[fid]

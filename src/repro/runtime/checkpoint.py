@@ -19,9 +19,31 @@ import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np
-import zstandard
+
+try:
+    import zstandard
+except ImportError:          # degrade to stdlib zlib; format sniffed on read
+    zstandard = None
+import zlib
+
+_ZSTD_MAGIC = b"\x28\xb5\x2f\xfd"
 
 _DTYPE_FIX = {"bfloat16": jnp.bfloat16}
+
+
+def _compress(raw: bytes) -> bytes:
+    if zstandard is not None:
+        return zstandard.ZstdCompressor(level=3).compress(raw)
+    return zlib.compress(raw, 6)
+
+
+def _decompress(comp: bytes) -> bytes:
+    if comp[:4] == _ZSTD_MAGIC:
+        if zstandard is None:
+            raise IOError("checkpoint is zstd-compressed but zstandard "
+                          "is not installed")
+        return zstandard.ZstdDecompressor().decompress(comp)
+    return zlib.decompress(comp)
 
 
 def _path_str(path) -> str:
@@ -40,7 +62,7 @@ def save(ckpt_dir: str, step: int, tree, *, keep_last: int = 3) -> str:
         else:
             payload[key] = (arr.dtype.str, arr.shape, arr.tobytes())
     raw = msgpack.packb(payload, use_bin_type=True)
-    comp = zstandard.ZstdCompressor(level=3).compress(raw)
+    comp = _compress(raw)
     digest = hashlib.sha256(comp).hexdigest()
 
     step_dir = os.path.join(ckpt_dir, f"step_{step:010d}")
@@ -89,8 +111,7 @@ def restore(ckpt_dir: str, tree_like, step: int | None = None):
     got = hashlib.sha256(comp).hexdigest()
     if got != want:
         raise IOError(f"checkpoint {step_dir} corrupt: hash mismatch")
-    payload = msgpack.unpackb(
-        zstandard.ZstdDecompressor().decompress(comp), raw=False)
+    payload = msgpack.unpackb(_decompress(comp), raw=False)
 
     leaves, treedef = jax.tree_util.tree_flatten_with_path(tree_like)
     out = []

@@ -1,0 +1,26 @@
+"""repro.sim — the one way to run any simulator in this repo.
+
+    from repro.sim import SimRequest, get_backend
+
+    req = SimRequest.from_scenario(scenario)
+    res = get_backend("m4", params=params, cfg=cfg).run(req)
+
+Backends: "packet" (ns-3 stand-in ground truth), "flowsim" (numpy max-min
+reference), "flowsim_fast" (jitted lax.scan flowSim), "m4" (the learned
+simulator). `run_many` batches scenarios — the jax backends execute the
+whole batch in one vmapped compile. Closed-loop workloads go through
+`run_closed_loop(backend, ...)`.
+"""
+from .api import SimRequest, SimResult
+from .backends import (Backend, FlowSimBackend, FlowSimFastBackend,
+                       M4Backend, PacketBackend, get_backend, list_backends,
+                       register_backend)
+from .closedloop import (ClosedLoopResult, ClosedLoopSession, FlowSimSession,
+                         PacketSession, run_closed_loop)
+
+__all__ = [
+    "SimRequest", "SimResult", "Backend", "register_backend", "get_backend",
+    "list_backends", "PacketBackend", "FlowSimBackend", "FlowSimFastBackend",
+    "M4Backend", "ClosedLoopResult", "ClosedLoopSession", "run_closed_loop",
+    "PacketSession", "FlowSimSession",
+]

@@ -1,0 +1,85 @@
+"""The one request/response contract every simulator backend speaks.
+
+The paper's headline tables run the *same scenarios* through three
+simulators (packet-level ground truth, flowSim, m4). `SimRequest` freezes
+one scenario — topology + congestion-control `NetConfig` + flow list —
+plus execution options, and every backend returns the same `SimResult`,
+so callers swap granularities without adapter glue:
+
+    from repro.sim import SimRequest, get_backend
+
+    req = SimRequest(topo=topo, config=NetConfig(cc="dctcp"), flows=flows)
+    res = get_backend("m4", params=params, cfg=cfg).run(req)
+    print(res.slowdowns)
+
+Batched execution (`Backend.run_many`) takes a list of requests; the
+jax-backed backends pad them to one arena shape and vmap a single compiled
+scan across scenarios.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..net.packetsim import Flow, NetConfig
+from ..net.topology import FatTree
+
+
+@dataclass(frozen=True)
+class SimRequest:
+    """One scenario + execution options.
+
+    flows are coerced to a tuple; backends must not mutate them (the packet
+    backend deep-copies internally because its flows carry runtime state).
+    """
+    topo: FatTree
+    config: NetConfig
+    flows: Tuple[Flow, ...]
+    until: Optional[float] = None      # stop simulated time (None = run out)
+    seed: int = 0                      # backend-internal randomness (packet ECN)
+    record_events: bool = False        # fill SimResult.event_* where supported
+
+    def __post_init__(self):
+        # canonicalize: backends index arenas by fid AND iterate positionally,
+        # so establish flows[i].fid == i here rather than trusting callers.
+        flows = tuple(sorted(self.flows, key=lambda f: f.fid))
+        object.__setattr__(self, "flows", flows)
+        if [f.fid for f in flows] != list(range(len(flows))):
+            raise ValueError(
+                "flow fids must be exactly 0..N-1 — they index the "
+                "simulator arenas (renumber the flows before building "
+                "a SimRequest)")
+
+    @classmethod
+    def from_scenario(cls, scenario, **options) -> "SimRequest":
+        """Build from a `repro.data.traffic.Scenario` (generates its flows)."""
+        return cls(topo=scenario.topo, config=scenario.config,
+                   flows=tuple(scenario.generate()), **options)
+
+    @property
+    def num_flows(self) -> int:
+        return len(self.flows)
+
+
+@dataclass(frozen=True)
+class SimResult:
+    """Uniform per-scenario output.
+
+    fcts/slowdowns are always present (NaN where a flow never finished).
+    The event log (times/types/fids, per-event remaining sizes, per-link
+    queue estimates at arrivals) is filled only when the backend records
+    events and `record_events` was requested. `raw` carries the
+    backend-native object (e.g. the packet `Trace` used for training data).
+    """
+    fcts: np.ndarray
+    slowdowns: np.ndarray
+    wall_time: float
+    backend: str = ""
+    event_times: Optional[np.ndarray] = None
+    event_types: Optional[np.ndarray] = None   # 0 = arrival, 1 = departure
+    event_fids: Optional[np.ndarray] = None
+    event_remaining: Optional[tuple] = None    # per-event remaining sizes
+    event_queues: Optional[tuple] = None       # arrival events: path queue bytes
+    raw: Any = field(default=None, compare=False)

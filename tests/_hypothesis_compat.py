@@ -1,0 +1,61 @@
+"""Graceful degradation when `hypothesis` is not installed.
+
+Test modules import `given`, `settings`, and `st` from here instead of
+from hypothesis directly. With hypothesis present this is a pure
+re-export; without it, `@given` replays a small deterministic set of
+examples drawn from lightweight strategy stubs (bounds, midpoint, and a
+few seeded interior points), so property tests degrade to fixed-example
+tests instead of erroring the whole suite at collection time.
+"""
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import itertools
+    import random
+
+    HAVE_HYPOTHESIS = False
+
+    class _Integers:
+        def __init__(self, lo, hi):
+            self.lo, self.hi = lo, hi
+
+        def examples(self):
+            rng = random.Random(self.lo * 7919 + self.hi)
+            vals = [self.lo, self.hi, (self.lo + self.hi) // 2,
+                    rng.randint(self.lo, self.hi),
+                    rng.randint(self.lo, self.hi)]
+            out = []
+            for v in vals:          # dedupe, keep order
+                if v not in out:
+                    out.append(v)
+            return out
+
+    class _St:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Integers(min_value, max_value)
+
+    st = _St()
+
+    def settings(**_kwargs):
+        """No-op stand-in for hypothesis.settings(...) as a decorator."""
+        return lambda f: f
+
+    def given(*strategies):
+        """Replay a bounded product of fixed examples (at most 8 combos)."""
+        def deco(f):
+            combos = list(itertools.islice(
+                itertools.product(*(s.examples() for s in strategies)), 8))
+
+            # NOTE: no functools.wraps — pytest must see a zero-parameter
+            # signature (the real hypothesis rewrites it too), otherwise the
+            # strategy arguments get resolved as fixtures.
+            def wrapper():
+                for combo in combos:
+                    f(*combo)
+            wrapper.__name__ = f.__name__
+            wrapper.__doc__ = f.__doc__
+            return wrapper
+        return deco

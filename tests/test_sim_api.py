@@ -1,0 +1,187 @@
+"""Unified `repro.sim` backend API: registry round-trip, cross-backend
+smoke (all four backends accept the same SimRequest), flowSim fast-vs-
+reference parity through the API, and batched `run_many` equivalence —
+including the guarantee that a 4-scenario m4/flowsim_fast batch costs
+exactly ONE vmapped compile."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core.model import M4Config, init_m4
+from repro.data.traffic import sample_scenario
+from repro.sim import (Backend, SimRequest, SimResult, get_backend,
+                       list_backends, register_backend)
+
+TINY = M4Config(hidden=16, gnn_dim=12, mlp_hidden=8, gnn_layers=2,
+                snap_flows=8, snap_links=24)
+
+
+@pytest.fixture(scope="module")
+def tiny_params():
+    return init_m4(jax.random.PRNGKey(0), TINY)
+
+
+def requests(n_scenarios=4, base_flows=30):
+    """Same-seed scenarios with *different* flow counts (exercises padding)."""
+    return [SimRequest.from_scenario(
+        sample_scenario(s, num_flows=base_flows + 10 * s))
+        for s in range(n_scenarios)]
+
+
+# ------------------------------------------------------------------ registry
+def test_registry_roundtrip():
+    class Dummy(Backend):
+        name = "dummy"
+
+        def run(self, request):
+            return SimResult(fcts=np.zeros(request.num_flows),
+                             slowdowns=np.ones(request.num_flows),
+                             wall_time=0.0, backend=self.name)
+
+    register_backend("_test_dummy", Dummy)
+    try:
+        b = get_backend("_test_dummy")
+        assert isinstance(b, Dummy)
+        assert "_test_dummy" in list_backends()
+        req = requests(1)[0]
+        assert b.run(req).slowdowns.shape == (req.num_flows,)
+    finally:
+        from repro.sim import backends as _b
+        _b._REGISTRY.pop("_test_dummy", None)
+
+
+def test_unknown_backend_raises():
+    with pytest.raises(KeyError):
+        get_backend("no-such-simulator")
+
+
+def test_builtin_backends_registered():
+    for name in ["packet", "flowsim", "flowsim_fast", "m4"]:
+        assert name in list_backends()
+
+
+def test_m4_requires_params():
+    with pytest.raises(ValueError):
+        get_backend("m4")
+
+
+# -------------------------------------------------------------- cross-backend
+def test_all_backends_accept_same_request(tiny_params):
+    req = SimRequest.from_scenario(sample_scenario(2, num_flows=25))
+    backends = [get_backend("packet"), get_backend("flowsim"),
+                get_backend("flowsim_fast"),
+                get_backend("m4", params=tiny_params, cfg=TINY)]
+    for b in backends:
+        res = b.run(req)
+        assert res.backend == b.name
+        assert res.fcts.shape == (req.num_flows,)
+        assert res.slowdowns.shape == (req.num_flows,)
+        finite = np.isfinite(res.fcts)
+        assert finite.all(), f"{b.name} left unfinished flows"
+        assert (res.fcts[finite] >= 0).all()
+
+
+def test_packet_backend_records_events():
+    req = SimRequest.from_scenario(sample_scenario(1, num_flows=20),
+                                   record_events=True)
+    res = get_backend("packet").run(req)
+    assert res.event_times is not None and len(res.event_times) > 0
+    assert set(np.unique(res.event_types)) <= {0, 1}
+    assert len(res.event_remaining) == len(res.event_times)
+    assert res.raw is not None            # backend-native Trace for training
+
+
+# ------------------------------------------------------------------- parity
+def test_flowsim_fast_matches_reference_via_api():
+    """The jitted lax.scan flowSim and the numpy event-driven reference
+    must produce identical FCTs for the same SimRequest."""
+    req = SimRequest.from_scenario(sample_scenario(4, num_flows=50))
+    ref = get_backend("flowsim").run(req)
+    fast = get_backend("flowsim_fast").run(req)
+    np.testing.assert_allclose(fast.fcts, ref.fcts, rtol=1e-4)
+
+
+# ------------------------------------------------------------------ batching
+def test_flowsim_fast_run_many_matches_looped():
+    reqs = requests(4)
+    backend = get_backend("flowsim_fast")
+    looped = [backend.run(r) for r in reqs]
+    batched = backend.run_many(reqs)
+    assert len(batched) == len(reqs)
+    for l, b in zip(looped, batched):
+        np.testing.assert_allclose(b.fcts, l.fcts, rtol=1e-4)
+
+
+def test_m4_run_many_matches_looped(tiny_params):
+    reqs = requests(4)
+    backend = get_backend("m4", params=tiny_params, cfg=TINY)
+    looped = [backend.run(r) for r in reqs]
+    batched = backend.run_many(reqs)
+    assert len(batched) == len(reqs)
+    for l, b in zip(looped, batched):
+        np.testing.assert_allclose(b.fcts, l.fcts, rtol=2e-4, atol=1e-9)
+
+
+def test_m4_run_many_single_compile(tiny_params):
+    """≥4 scenarios through run_many must execute as ONE vmapped compile
+    (the counters tick only at trace time)."""
+    from repro.core.simulate import TRACE_COUNTS
+    reqs = requests(4)
+    backend = get_backend("m4", params=tiny_params, cfg=TINY)
+    backend.run_many(reqs)                      # warm (may compile)
+    before = TRACE_COUNTS["open_loop_batched"]
+    assert before >= 1
+    backend.run_many(reqs)                      # same shapes -> no retrace
+    assert TRACE_COUNTS["open_loop_batched"] == before
+
+
+def test_flowsim_fast_run_many_single_compile():
+    from repro.core.flowsim_fast import TRACE_COUNTS
+    reqs = requests(4)
+    backend = get_backend("flowsim_fast")
+    backend.run_many(reqs)
+    before = TRACE_COUNTS["event_scan_batched"]
+    assert before >= 1
+    backend.run_many(reqs)
+    assert TRACE_COUNTS["event_scan_batched"] == before
+
+
+# ------------------------------------------------------------------ requests
+def test_request_is_frozen_and_coerces_flows():
+    sc = sample_scenario(0, num_flows=10)
+    req = SimRequest(topo=sc.topo, config=sc.config, flows=sc.generate())
+    assert isinstance(req.flows, tuple) and req.num_flows == 10
+    with pytest.raises(Exception):
+        req.until = 1.0
+
+
+def test_request_canonicalizes_flow_order():
+    """Backends mix fid-based and positional indexing; SimRequest must
+    normalize so shuffled input can't silently change results."""
+    sc = sample_scenario(3, num_flows=20)
+    flows = sc.generate()
+    ordered = SimRequest(topo=sc.topo, config=sc.config, flows=flows)
+    shuffled = SimRequest(topo=sc.topo, config=sc.config,
+                          flows=list(reversed(flows)))
+    assert [f.fid for f in shuffled.flows] == list(range(20))
+    b = get_backend("flowsim_fast")
+    np.testing.assert_allclose(b.run(shuffled).fcts, b.run(ordered).fcts)
+
+
+def test_request_rejects_non_contiguous_fids():
+    from repro.net.packetsim import Flow, NetConfig
+    from repro.net.topology import FatTree
+    topo = FatTree(num_racks=2, hosts_per_rack=2, num_spines=1)
+    flows = [Flow(fid=5, src=0, dst=1, size=10_000, t_arrival=0.0,
+                  path=topo.path(0, 1, 5))]
+    with pytest.raises(ValueError, match="0..N-1"):
+        SimRequest(topo=topo, config=NetConfig(), flows=flows)
+
+
+def test_until_rejected_by_full_trace_backends(tiny_params):
+    req = SimRequest.from_scenario(sample_scenario(0, num_flows=10),
+                                   until=1e-3)
+    with pytest.raises(NotImplementedError):
+        get_backend("flowsim_fast").run(req)
+    with pytest.raises(NotImplementedError):
+        get_backend("m4", params=tiny_params, cfg=TINY).run(req)

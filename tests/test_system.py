@@ -5,8 +5,7 @@ import copy
 
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.events import build_event_batch
 from repro.core.flowsim import run_flowsim
@@ -16,6 +15,7 @@ from repro.core.training import train_m4
 from repro.data.traffic import sample_scenario
 from repro.net.packetsim import Flow, NetConfig, PacketSim
 from repro.net.topology import FatTree
+from repro.sim import get_backend, run_closed_loop
 
 CFG = M4Config(hidden=64, gnn_dim=48, mlp_hidden=32, snap_flows=16,
                snap_links=48)
@@ -55,16 +55,16 @@ def test_m4_beats_flowsim_on_holdout(trained):
 
 
 def test_closed_loop_adapters(trained):
-    from repro.core.closedloop import (FlowSimAdapter, M4Adapter,
-                                       PacketAdapter, make_backlog)
+    from repro.core.closedloop import make_backlog
     state, _, _ = trained
     topo = FatTree(num_racks=4, hosts_per_rack=4, num_spines=2)
     config = NetConfig(cc="dctcp")
     backlog = make_backlog(topo, client_racks=1, flows_per_rack=10,
                            size_dist="WebServer", seed=3)
-    gt = PacketAdapter(topo, config).run(backlog, 3)
-    fs = FlowSimAdapter(topo, config).run(backlog, 3)
-    m4 = M4Adapter(topo, config, state.params, CFG).run(backlog, 3)
+    gt = run_closed_loop(get_backend("packet"), topo, config, backlog, 3)
+    fs = run_closed_loop(get_backend("flowsim"), topo, config, backlog, 3)
+    m4 = run_closed_loop(get_backend("m4", params=state.params, cfg=CFG),
+                         topo, config, backlog, 3)
     assert gt.throughput > 0 and fs.throughput > 0 and m4.throughput > 0
     assert np.isfinite(gt.completion_times).sum() == 10
     assert np.isfinite(fs.completion_times).sum() == 10
@@ -119,12 +119,13 @@ def test_packetsim_deterministic(seed):
 
 def test_m4_closed_loop_inflight_sensitivity(trained):
     """Closed-loop m4 responds sensibly to the inflight budget."""
-    from repro.core.closedloop import M4Adapter, make_backlog
+    from repro.core.closedloop import make_backlog
     state, _, _ = trained
     topo = FatTree(num_racks=4, hosts_per_rack=4, num_spines=2)
     config = NetConfig(cc="dctcp")
     backlog = make_backlog(topo, client_racks=1, flows_per_rack=8,
                            size_dist="WebServer", seed=5)
-    t1 = M4Adapter(topo, config, state.params, CFG).run(backlog, 1).throughput
-    t7 = M4Adapter(topo, config, state.params, CFG).run(backlog, 7).throughput
+    m4 = get_backend("m4", params=state.params, cfg=CFG)
+    t1 = run_closed_loop(m4, topo, config, backlog, 1).throughput
+    t7 = run_closed_loop(m4, topo, config, backlog, 7).throughput
     assert t7 > t1 * 0.5
