@@ -11,8 +11,9 @@ import numpy as np
 from repro.core.events import build_event_batch
 from repro.core.model import M4Config
 from repro.core.training import train_m4
-from repro.data.traffic import Scenario, sample_scenario
+from repro.data.traffic import Scenario
 from repro.runtime import checkpoint as ckpt
+from repro.scenarios import get_suite
 from repro.sim import SimRequest, get_backend
 
 # CI-scale m4 (paper: hidden=400, gnn=300, mlp=200 — same structure)
@@ -44,9 +45,13 @@ def trained_m4(force=False, log=print):
         return params, cfg
     t0 = time.perf_counter()
     batches = []
-    for seed in range(N_TRAIN_SIMS):
-        sc = sample_scenario(seed, num_flows=FLOWS_PER_SIM, synthetic=True)
-        batches.append(build_event_batch(ground_truth(sc), cfg))
+    # the paper's training distribution as a declarative suite: identical
+    # to sample_scenario(0..N-1) by construction (see random_spec)
+    suite = get_suite("table2_train_space", n=N_TRAIN_SIMS,
+                      num_flows=FLOWS_PER_SIM, synthetic=True)
+    for spec in suite:
+        batches.append(build_event_batch(ground_truth(spec.to_scenario()),
+                                         cfg))
     log(f"[bench] generated {len(batches)} training sims "
         f"({time.perf_counter()-t0:.0f}s)")
     state, hist = train_m4(batches, cfg, epochs=EPOCHS, lr=1e-3, log=log)

@@ -1,54 +1,36 @@
 """Paper Table 1: packet-level (ns-3 stand-in) vs flowSim — wallclock,
-per-flow slowdown error, tail slowdown. Three scenarios mirroring the
-paper's (CacheFollower/DCTCP, Hadoop/TIMELY, Hadoop/DCTCP 1-to-1).
-Both simulators run through `repro.sim.get_backend`."""
+per-flow slowdown error, tail slowdown. The three scenarios (CacheFollower/
+DCTCP, Hadoop/TIMELY, Hadoop/DCTCP 1-to-1) are the `table1_paper` suite
+(`repro.scenarios.suites`); both simulators run through `SweepRunner`
+(uncached — this table measures wall time)."""
 from __future__ import annotations
 
 import numpy as np
 
-from repro.data.traffic import Scenario
-from repro.net.packetsim import NetConfig
-from repro.net.topology import paper_train_topo
-from repro.sim import SimRequest, get_backend
-
-
-def scenarios(num_flows):
-    return [
-        ("CacheFollower/DCTCP/4-1",
-         Scenario(topo=paper_train_topo("4-to-1"), config=NetConfig(cc="dctcp"),
-                  size_dist="CacheFollower", max_load=0.35, sigma=1.0,
-                  matrix="A", num_flows=num_flows, seed=101)),
-        ("Hadoop/TIMELY/4-1",
-         Scenario(topo=paper_train_topo("4-to-1"), config=NetConfig(cc="timely"),
-                  size_dist="Hadoop", max_load=0.58, sigma=1.0,
-                  matrix="C", num_flows=num_flows, seed=102)),
-        ("Hadoop/DCTCP/1-1",
-         Scenario(topo=paper_train_topo("1-to-1"), config=NetConfig(cc="dctcp"),
-                  size_dist="Hadoop", max_load=0.74, sigma=2.0,
-                  matrix="C", num_flows=num_flows, seed=103)),
-    ]
+from repro.scenarios import SweepRunner, get_suite
+from repro.sim import get_backend
 
 
 def run(num_flows=400, log=print):
+    suite = get_suite("table1_paper", num_flows=num_flows)
+    gt_rep = SweepRunner(get_backend("packet"), chunk_size=None).run(suite)
+    fs_rep = SweepRunner(get_backend("flowsim"), chunk_size=None).run(suite)
     rows = []
-    packet, flowsim = get_backend("packet"), get_backend("flowsim")
     log("scenario, t_ns3_s, t_flowsim_s, speedup, err_mean, err_p90, "
         "tail_ns3, tail_flowsim")
-    for name, sc in scenarios(num_flows):
-        req = SimRequest.from_scenario(sc)
-        gt_res = packet.run(req)
-        gt = gt_res.slowdowns
-        fs = flowsim.run(req)
-        err = np.abs(fs.slowdowns - gt) / gt
+    for ge, fe in zip(gt_rep.entries, fs_rep.entries):
+        gt, fs = ge.result, fe.result
+        err = np.abs(fs.slowdowns - gt.slowdowns) / gt.slowdowns
         row = dict(
-            scenario=name, t_ns3=gt_res.wall_time, t_flowsim=fs.wall_time,
-            speedup=gt_res.wall_time / max(fs.wall_time, 1e-9),
+            scenario=ge.spec.label, t_ns3=gt.wall_time,
+            t_flowsim=fs.wall_time,
+            speedup=gt.wall_time / max(fs.wall_time, 1e-9),
             err_mean=float(np.nanmean(err)),
             err_p90=float(np.nanpercentile(err, 90)),
-            tail_ns3=float(np.nanpercentile(gt, 99)),
+            tail_ns3=float(np.nanpercentile(gt.slowdowns, 99)),
             tail_fs=float(np.nanpercentile(fs.slowdowns, 99)))
         rows.append(row)
-        log(f"{name}, {row['t_ns3']:.2f}, {fs.wall_time:.3f}, "
+        log(f"{row['scenario']}, {row['t_ns3']:.2f}, {fs.wall_time:.3f}, "
             f"{row['speedup']:.0f}x, {row['err_mean']:.3f}, "
             f"{row['err_p90']:.3f}, {row['tail_ns3']:.2f}, {row['tail_fs']:.2f}")
     return rows

@@ -2,49 +2,39 @@
 empirical workloads (CacheFollower / WebServer / Hadoop), plus runtime.
 Also emits the per-slowdown-bucket error breakdown (Fig. 8).
 
-All three workloads are evaluated through `repro.sim`: flowSim per
-request, m4 as ONE `run_many` batch (a single vmapped compile over the
-whole sweep instead of a retrace per workload)."""
+Scenarios come from the `table3_empirical` suite; both simulators dispatch
+through `repro.scenarios.SweepRunner` with chunk_size=None, so the m4
+sweep is ONE `run_many` batch — a single vmapped compile over the whole
+workload set instead of a retrace per workload."""
 from __future__ import annotations
 
 import numpy as np
 
-from repro.data.traffic import Scenario
-from repro.net.packetsim import NetConfig
-from repro.net.topology import paper_train_topo
-from repro.sim import SimRequest, get_backend
+from repro.scenarios import SweepRunner, get_suite
+from repro.sim import get_backend
 
 from .common import ground_truth, slowdown_errors, trained_m4
 
 
-def scenarios(num_flows):
-    out = []
-    for i, dist in enumerate(["CacheFollower", "WebServer", "Hadoop"]):
-        out.append((dist, Scenario(
-            topo=paper_train_topo("2-to-1"), config=NetConfig(cc="dctcp"),
-            size_dist=dist, max_load=0.5, sigma=1.0, matrix="B",
-            num_flows=num_flows, seed=200 + i)))
-    return out
-
-
 def run(num_flows=300, log=print):
     params, cfg = trained_m4(log=log)
-    named = scenarios(num_flows)
-    reqs = [SimRequest.from_scenario(sc) for _, sc in named]
-    traces = [ground_truth(sc) for _, sc in named]
+    suite = get_suite("table3_empirical", num_flows=num_flows)
+    traces = [ground_truth(spec.to_scenario()) for spec in suite]
 
-    flowsim = get_backend("flowsim")
-    fs_results = [flowsim.run(r) for r in reqs]
+    fs_rep = SweepRunner(get_backend("flowsim"), chunk_size=None).run(suite)
     # one compiled vmapped scan across every workload in the sweep
-    m4_results = get_backend("m4", params=params, cfg=cfg).run_many(reqs)
+    m4_rep = SweepRunner(get_backend("m4", params=params, cfg=cfg),
+                         chunk_size=None).run(suite)
 
     rows = []
     log("workload, method, err_mean, err_p90, tail_sldn, time_s")
     buckets_all = {}
-    for (name, sc), trace, fsr, m4r in zip(named, traces, fs_results,
-                                           m4_results):
+    for spec, trace, fse, m4e in zip(suite, traces, fs_rep.entries,
+                                     m4_rep.entries):
         gt = trace.slowdowns
+        fsr, m4r = fse.result, m4e.result
         e_fs, e_m4 = slowdown_errors(gt, fsr), slowdown_errors(gt, m4r)
+        name = spec.label
         r = {
             "workload": name,
             "flowsim_mean": e_fs["mean"], "flowsim_p90": e_fs["p90"],

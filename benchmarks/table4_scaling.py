@@ -4,37 +4,33 @@ jitted event step (the paper's speedup comes from constant-cost GPU steps
 vs flowSim's O(active-flows) waterfilling; the same structure shows here).
 Also reports events/sec so the trend is hardware-independent.
 
-Simulators run through `repro.sim.get_backend`; sizes differ per row so
-each row is its own compile (use `run_many` for same-shape sweeps)."""
+Rows come from the `table4_scaling` suite and run through `SweepRunner`
+with chunk_size=1 and no cache: every row's shape is intentionally its own
+compile and its own timing (use larger chunks for same-shape sweeps)."""
 from __future__ import annotations
 
-from repro.data.traffic import Scenario
-from repro.net.packetsim import NetConfig
-from repro.net.topology import FatTree
-from repro.sim import SimRequest, get_backend
+from repro.scenarios import SweepRunner, get_suite
+from repro.sim import get_backend
 
 from .common import trained_m4
 
 
-def run(sizes=((8, 4), (16, 8), (32, 8), (64, 16)), flows_base=150, log=print):
+def run(sizes=((8, 4), (16, 8), (32, 8), (64, 16)), flows_base=150,
+        log=print):
     params, cfg = trained_m4(log=log)
-    flowsim = get_backend("flowsim")
-    m4 = get_backend("m4", params=params, cfg=cfg)
+    suite = get_suite("table4_scaling", flows_base=flows_base, sizes=sizes)
+    fs_rep = SweepRunner(get_backend("flowsim"), chunk_size=1).run(suite)
+    m4_rep = SweepRunner(get_backend("m4", params=params, cfg=cfg),
+                         chunk_size=1).run(suite)
     log("racks, hosts, flows, t_flowsim_s, t_m4_s, ratio, m4_events_per_s")
     rows = []
-    for racks, hpr in sizes:
-        topo = FatTree(num_racks=racks, hosts_per_rack=hpr,
-                       num_spines=max(2, hpr // 2))
-        n = flows_base * racks // 8
-        sc = Scenario(topo=topo, config=NetConfig(cc="dctcp"),
-                      size_dist="WebServer", max_load=0.5, sigma=1.0,
-                      matrix="A", num_flows=n, seed=300 + racks)
-        req = SimRequest.from_scenario(sc)
-        fs = flowsim.run(req)
-        res = m4.run(req)
-        rows.append(dict(racks=racks, hosts=topo.num_hosts, flows=n,
+    for spec, fse, m4e in zip(suite, fs_rep.entries, m4_rep.entries):
+        topo = spec.build_topo()
+        n = spec.num_flows
+        fs, res = fse.result, m4e.result
+        rows.append(dict(racks=topo.num_racks, hosts=topo.num_hosts, flows=n,
                          t_flowsim=fs.wall_time, t_m4=res.wall_time))
-        log(f"{racks}, {topo.num_hosts}, {n}, {fs.wall_time:.2f}, "
+        log(f"{topo.num_racks}, {topo.num_hosts}, {n}, {fs.wall_time:.2f}, "
             f"{res.wall_time:.2f}, {fs.wall_time/res.wall_time:.2f}x, "
             f"{2*n/res.wall_time:.0f}")
     return rows

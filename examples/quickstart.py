@@ -20,7 +20,7 @@ import numpy as np
 from repro.core.events import build_event_batch
 from repro.core.model import M4Config
 from repro.core.training import train_m4
-from repro.data.traffic import sample_scenario
+from repro.scenarios import get_suite, random_spec
 from repro.sim import SimRequest, get_backend
 
 
@@ -36,10 +36,14 @@ def main():
     packet = get_backend("packet")
 
     print("== generating ground truth (packet-level DES) ==")
+    # training sims = the paper's Table-2 training distribution as a
+    # declarative suite; holdout = one empirical (test-distribution) spec
+    specs = list(get_suite("table2_train_space", n=args.sims,
+                           num_flows=args.flows)) \
+        + [random_spec(args.sims, num_flows=args.flows, synthetic=False)]
     batches, holdout = [], None
-    for seed in range(args.sims + 1):
-        sc = sample_scenario(seed, num_flows=args.flows,
-                             synthetic=seed < args.sims)
+    for seed, spec in enumerate(specs):
+        sc = spec.to_scenario()
         req = SimRequest.from_scenario(sc)
         trace = packet.run(req).raw
         if seed < args.sims:

@@ -7,7 +7,9 @@ paper's Table-4 scaling argument applied back to the baseline.
 
 `run_flowsim_fast_batch` pads B scenarios to one incidence shape and vmaps
 the scan, so a benchmark sweep costs one compile instead of B (exposed as
-`repro.sim.get_backend("flowsim_fast").run_many`).
+`repro.sim.get_backend("flowsim_fast").run_many`); with more than one
+local device the batch is `jax.pmap`-sharded (devices x B/devices) so the
+sweep also divides across accelerators.
 
 Equivalence with the numpy event-driven reference is tested in
 tests/test_flowsim_fast.py; batched-vs-looped in tests/test_sim_api.py.
@@ -98,6 +100,14 @@ def _event_scan_batched(a, cap, sizes_bits, arr_times, arr_order):
     return jax.vmap(_event_scan_core)(a, cap, sizes_bits, arr_times, arr_order)
 
 
+@jax.pmap
+def _event_scan_sharded(a, cap, sizes_bits, arr_times, arr_order):
+    """pmap(vmap(scan)): leading axis = local devices, second = scenarios
+    per device. One compile serves the whole sharded sweep chunk."""
+    TRACE_COUNTS["event_scan_sharded"] += 1
+    return jax.vmap(_event_scan_core)(a, cap, sizes_bits, arr_times, arr_order)
+
+
 def _pack(topo, flows, n_total=None, l_total=None):
     """Dense incidence + arrival schedule, optionally padded to shared shape.
     Padded flows have empty paths and arrive at t=BIG (strictly after every
@@ -150,8 +160,14 @@ def run_flowsim_fast_batch(scenarios):
     packed = [_pack(topo, flows, n_total=n_max, l_total=l_max)
               for topo, flows in scenarios]
     stacked = [jnp.asarray(np.stack(col)) for col in zip(*packed)]
+    D = jax.local_device_count()
     t0 = time.perf_counter()
-    fct_abs = np.asarray(_event_scan_batched(*stacked))
+    if D > 1 and len(scenarios) >= D:
+        from .sharding import shard_leaves, unshard
+        fct_abs = unshard(np.asarray(_event_scan_sharded(
+            *shard_leaves(stacked, D))), len(scenarios))
+    else:
+        fct_abs = np.asarray(_event_scan_batched(*stacked))
     wall = time.perf_counter() - t0
     return [_result(topo, flows, fct_abs[b], wall / len(scenarios))
             for b, (topo, flows) in enumerate(scenarios)]

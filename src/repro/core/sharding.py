@@ -1,0 +1,33 @@
+"""Device-sharding helper shared by the batched simulator entry points.
+
+Both jax backends (`flowsim_fast`, m4's open-loop scan) shard their
+vmapped scenario batches the same way: pad the leading batch axis up to a
+multiple of the local device count by repeating the last scenario, then
+reshape (B, ...) -> (D, ceil(B/D), ...) for `jax.pmap`. Keeping the
+pad/unshard semantics in one place means the two backends cannot drift.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def shard_leaves(tree, n_devices: int):
+    """(B, ...) leaves -> (D, ceil(B/D), ...), padding by repeating the
+    last row. Padded replicas cost compute, never correctness — callers
+    drop them by slicing the unsharded result back to B (see
+    `unshard`). Works on any pytree (dict of arrays, list, single array).
+    """
+    def one(col):
+        B = col.shape[0]
+        per = -(-B // n_devices)
+        pad = per * n_devices - B
+        if pad:
+            col = jnp.concatenate([col, jnp.repeat(col[-1:], pad, 0)], 0)
+        return col.reshape((n_devices, per) + col.shape[1:])
+    return jax.tree_util.tree_map(one, tree)
+
+
+def unshard(arr, batch: int):
+    """(D, B/D, ...) device output -> (B, ...), dropping pad replicas."""
+    return arr.reshape((-1,) + arr.shape[2:])[:batch]

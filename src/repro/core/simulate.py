@@ -9,7 +9,9 @@ re-prediction for affected flows.
 `simulate_open_loop` runs the whole trace as one `lax.scan` (2N events).
 `simulate_open_loop_batch` pads B scenarios to a shared arena shape and
 `jax.vmap`s the scan across them — one compiled call instead of B retraces
-(this is what `repro.sim.get_backend("m4").run_many` dispatches to).
+(this is what `repro.sim.get_backend("m4").run_many` dispatches to) —
+and `jax.pmap`-shards the vmapped batch across local devices when more
+than one exists (params broadcast, arenas split devices x B/devices).
 `M4Simulator` exposes a single-event step for closed-loop applications that
 inject flows dynamically (§5.4).
 
@@ -219,6 +221,21 @@ def _open_loop_scan_batched(params, cfg: M4Config, num_links: int, static,
     return jax.vmap(one)(static, arr_order, arr_times)
 
 
+@partial(jax.pmap, static_broadcasted_argnums=(1, 2),
+         in_axes=(None, None, None, 0, 0, 0))
+def _open_loop_scan_sharded(params, cfg: M4Config, num_links: int, static,
+                            arr_order, arr_times):
+    """pmap(vmap(scan)): params broadcast to every local device, scenario
+    arenas sharded (D, B/D, ...) across them — one compile per sweep chunk,
+    N/devices scenarios of work per device."""
+    TRACE_COUNTS["open_loop_sharded"] += 1
+
+    def one(s, o, t):
+        return _open_loop_core(params, cfg, num_links, s, o, t)
+
+    return jax.vmap(one)(static, arr_order, arr_times)
+
+
 @dataclass
 class M4Result:
     fcts: np.ndarray
@@ -305,11 +322,21 @@ def simulate_open_loop_batch(params, cfg: M4Config, scenarios) -> list:
         ideals.append(ideal)
         counts.append(len(flows))
     batched = {k: jnp.stack([s[k] for s in statics]) for k in statics[0]}
+    order_b = jnp.asarray(np.stack(orders))
+    times_b = jnp.asarray(np.stack(times))
+    D = jax.local_device_count()
     t0 = time.perf_counter()
-    fct, done = _open_loop_scan_batched(
-        params, cfg, l_max, batched,
-        jnp.asarray(np.stack(orders)), jnp.asarray(np.stack(times)))
-    fct = np.asarray(jax.block_until_ready(fct))
+    if D > 1 and len(scenarios) >= D:
+        from .sharding import shard_leaves, unshard
+        fct, done = _open_loop_scan_sharded(
+            params, cfg, l_max, shard_leaves(batched, D),
+            shard_leaves(order_b, D), shard_leaves(times_b, D))
+        fct = unshard(np.asarray(jax.block_until_ready(fct)),
+                      len(scenarios))
+    else:
+        fct, done = _open_loop_scan_batched(
+            params, cfg, l_max, batched, order_b, times_b)
+        fct = np.asarray(jax.block_until_ready(fct))
     wall = time.perf_counter() - t0
     out = []
     for b, n in enumerate(counts):

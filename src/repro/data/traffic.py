@@ -5,11 +5,23 @@ Synthetic flow-size distributions (Pareto/Exp/Gaussian/Lognormal with scale
 (CacheFollower / WebServer / Hadoop, approximated piecewise CDFs from
 Roy et al. SIGCOMM'15) for test. Lognormal inter-arrivals with burstiness
 σ ∈ {1, 2}; rack-to-rack traffic matrices A/B/C; max-link-load targeting.
+
+The space itself is *declarative*: `TABLE2_SPACE` lists every Table-2 axis
+with its draw rule, `sample_point` draws one parameter dict from it, and
+`sample_scenario` materializes that point — `repro.scenarios.ScenarioSpec`
+consumes the same space for grid/random sweeps, so the sampler and the
+sweep layer can never disagree about what the Table-2 space is.
+
+Beyond the paper's Table-2 workload, `Scenario.workload` selects extra
+flow-pattern families (`WORKLOADS`): "incast" fan-in bursts, shifted-
+"permutation" and "all_to_all" collective patterns (the flow shapes of
+`examples/simulate_collectives.py`), and the "mixed" empirical size
+distribution that interleaves all three Meta CDFs in one scenario.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import List, Optional
+from dataclasses import dataclass
+from typing import Dict, List, Optional
 
 import numpy as np
 
@@ -27,6 +39,7 @@ EMPIRICAL = {
     # bimodal: control msgs + large shuffles
     "Hadoop": ([300, 1e3, 5e3, 30e3, 300e3, 2e6], [0.5, 0.65, 0.8, 0.9, 0.99, 1.0]),
 }
+SIZE_BOUNDS = (200, 5e6)   # bytes; every sampler clips into this range
 
 
 def sample_sizes(rng, dist: str, n: int, theta: float = 20e3) -> np.ndarray:
@@ -44,9 +57,18 @@ def sample_sizes(rng, dist: str, n: int, theta: float = 20e3) -> np.ndarray:
         logp = np.log(np.array([pts[0] / 3] + list(pts)))
         cdfp = np.array([0.0] + list(cdf))
         s = np.exp(np.interp(u, cdfp, logp))
+    elif dist == "mixed":
+        # beyond-paper: one scenario interleaving all three Meta CDFs
+        keys = list(EMPIRICAL)
+        which = rng.integers(0, len(keys), n)
+        s = np.empty(n)
+        for i, k in enumerate(keys):
+            m = which == i
+            if m.any():
+                s[m] = sample_sizes(rng, k, int(m.sum()), theta)
     else:
         raise ValueError(dist)
-    return np.clip(s, 200, 5e6).astype(np.int64)
+    return np.clip(s, *SIZE_BOUNDS).astype(np.int64)
 
 
 def traffic_matrix(rng, kind: str, num_racks: int) -> np.ndarray:
@@ -65,9 +87,62 @@ def traffic_matrix(rng, kind: str, num_racks: int) -> np.ndarray:
     return m / m.sum()
 
 
+# ------------------------------------------------------- declarative space
+# Axis -> draw rule, in DRAW ORDER (sample_point consumes the rng stream in
+# dict order; changing the order silently changes every seeded scenario).
+# "choice" axes draw uniformly from the tuple; "uniform" axes from [lo, hi).
+TABLE2_SPACE: Dict[str, tuple] = {
+    "oversub": ("choice", ("1-to-1", "2-to-1", "4-to-1")),
+    "cc": ("choice", ("dctcp", "dcqcn", "timely")),
+    "init_window": ("uniform", 5e3, 15e3),
+    "buffer_bytes": ("uniform", 100e3, 160e3),
+    "dctcp_k": ("uniform", 10e3, 30e3),
+    "dcqcn_kmin": ("uniform", 10e3, 30e3),
+    "dcqcn_kmax": ("uniform", 30e3, 50e3),
+    "timely_tlow": ("uniform", 40e-6, 60e-6),
+    "timely_thigh": ("uniform", 100e-6, 150e-6),
+    "size_dist": ("workload-dependent", None),   # SYNTH_DISTS or EMPIRICAL
+    "theta": ("uniform", 5e3, 50e3),
+    "sigma": ("choice", (1.0, 2.0)),
+    "max_load": ("uniform", 0.3, 0.8),
+    "matrix": ("choice", ("A", "B", "C")),
+}
+# the TABLE2_SPACE axes that are NetConfig congestion-control knobs
+NET_KNOBS = ("init_window", "buffer_bytes", "dctcp_k", "dcqcn_kmin",
+             "dcqcn_kmax", "timely_tlow", "timely_thigh")
+
+
+def sample_point(rng, synthetic: bool = True) -> Dict[str, object]:
+    """Draw one Table-2 parameter point (primitives only, no objects).
+
+    This is the single source of truth for random Table-2 sampling:
+    `sample_scenario` materializes the dict into topology + NetConfig +
+    `Scenario`, and `repro.scenarios.random_spec` freezes the same dict
+    into a declarative `ScenarioSpec` — the two are bit-identical.
+    """
+    point: Dict[str, object] = {}
+    for name, axis in TABLE2_SPACE.items():
+        if name == "size_dist":
+            pool = SYNTH_DISTS if synthetic else list(EMPIRICAL.keys())
+            point[name] = str(rng.choice(pool))
+        elif axis[0] == "choice":
+            v = rng.choice(list(axis[1]))
+            point[name] = str(v) if isinstance(v, str) else float(v)
+        else:
+            point[name] = float(rng.uniform(axis[1], axis[2]))
+    return point
+
+
 @dataclass
 class Scenario:
-    """One sampled point of the Table-2 space."""
+    """One materialized point of the Table-2 space (+ workload family).
+
+    `workload` selects the flow-pattern generator from `WORKLOADS`:
+    "table2" is the paper's matrix-driven pattern (§5.1); "incast",
+    "permutation" and "all_to_all" are beyond-paper collective/storage
+    patterns that stress the simulators where flowSim is known weakest
+    (synchronized bursts, §2.2).
+    """
     topo: FatTree
     config: NetConfig
     size_dist: str = "lognormal"
@@ -77,9 +152,23 @@ class Scenario:
     matrix: str = "A"
     num_flows: int = 2000
     seed: int = 0
+    workload: str = "table2"
+    fan_in: int = 16              # incast: senders per burst
+    participants: int = 8         # permutation / all_to_all ranks
 
     def generate(self) -> List[Flow]:
+        """Deterministically materialize the flow list (fixed `seed` ->
+        identical flows, across calls and processes)."""
+        if self.workload not in WORKLOADS:
+            raise ValueError(f"unknown workload {self.workload!r}; "
+                             f"available: {sorted(WORKLOADS)}")
         rng = np.random.default_rng(self.seed)
+        return WORKLOADS[self.workload](self, rng)
+
+    # ------------------------------------------------- workload families
+    def _gen_table2(self, rng) -> List[Flow]:
+        """The paper's workload: matrix-driven src/dst, sampled sizes,
+        lognormal inter-arrivals scaled to hit `max_load` (§5.1)."""
         topo = self.topo
         sizes = sample_sizes(rng, self.size_dist, self.num_flows, self.theta)
         tm = traffic_matrix(rng, self.matrix, topo.num_racks)
@@ -112,31 +201,115 @@ class Scenario:
                      path=paths[i])
                 for i in range(self.num_flows)]
 
+    def _gen_incast(self, rng) -> List[Flow]:
+        """Fan-in bursts: waves of `fan_in` senders all firing at one
+        aggregator host at the same instant (partition/aggregate storage
+        pattern). Wave gaps are lognormal and scaled so the aggregator's
+        downlink carries `max_load` on average."""
+        topo, n = self.topo, self.num_flows
+        fan = max(1, min(self.fan_in, topo.num_hosts - 1))
+        sizes = sample_sizes(rng, self.size_dist, n, self.theta)
+        agg = int(rng.integers(topo.num_hosts))
+        others = np.array([h for h in range(topo.num_hosts) if h != agg])
+        cap = float(topo.capacity[topo.down_host(agg)])
+        flows: List[Flow] = []
+        t, fid = 0.0, 0
+        while fid < n:
+            k = min(fan, n - fid)
+            senders = rng.choice(others, size=k, replace=False)
+            wave_bits = float(sizes[fid:fid + k].sum()) * 8.0
+            for s in senders:
+                flows.append(Flow(fid=fid, src=int(s), dst=agg,
+                                  size=int(sizes[fid]), t_arrival=t,
+                                  path=topo.path(int(s), agg, fid)))
+                fid += 1
+            gap = wave_bits / (self.max_load * cap)
+            t += float(rng.lognormal(
+                np.log(max(gap, 1e-9)) - self.sigma ** 2 / 2, self.sigma))
+        return flows
+
+    def _gen_permutation(self, rng) -> List[Flow]:
+        """Rounds of a shifted permutation over `participants` hosts:
+        round r picks a random cyclic shift j >= 1 and host i sends one
+        flow to host (i+j) mod m — the per-step pattern of ring
+        collectives (`examples/simulate_collectives.py`)."""
+        topo, n = self.topo, self.num_flows
+        m = max(2, min(self.participants, topo.num_hosts))
+        hosts = np.linspace(0, topo.num_hosts - 1, m).astype(int)
+        sizes = sample_sizes(rng, self.size_dist, n, self.theta)
+        cap = float(topo.capacity.max())
+        flows: List[Flow] = []
+        t, fid = 0.0, 0
+        while fid < n:
+            shift = int(rng.integers(1, m))
+            k = min(m, n - fid)
+            round_sizes = sizes[fid:fid + k]
+            for i in range(k):
+                s, d = int(hosts[i]), int(hosts[(i + shift) % m])
+                flows.append(Flow(fid=fid, src=s, dst=d,
+                                  size=int(round_sizes[i]), t_arrival=t,
+                                  path=topo.path(s, d, fid)))
+                fid += 1
+            gap = float(round_sizes.max()) * 8.0 / (self.max_load * cap)
+            t += float(rng.lognormal(
+                np.log(max(gap, 1e-9)) - self.sigma ** 2 / 2, self.sigma))
+        return flows
+
+    def _gen_all_to_all(self, rng) -> List[Flow]:
+        """Rounds of a full exchange: every ordered pair of `participants`
+        hosts moves one equal chunk of `theta` bytes, all released at the
+        round start (the all-to-all phase of expert/sequence parallelism).
+        Round gaps target `max_load` on the busiest uplink, which carries
+        (m-1) chunks per round."""
+        topo, n = self.topo, self.num_flows
+        m = max(2, min(self.participants, topo.num_hosts))
+        hosts = np.linspace(0, topo.num_hosts - 1, m).astype(int)
+        chunk = int(np.clip(self.theta, *SIZE_BOUNDS))
+        cap = float(topo.capacity.max())
+        flows: List[Flow] = []
+        t, fid = 0.0, 0
+        while fid < n:
+            for i in range(m):
+                for j in range(m):
+                    if i == j or fid >= n:
+                        continue
+                    s, d = int(hosts[i]), int(hosts[j])
+                    flows.append(Flow(fid=fid, src=s, dst=d, size=chunk,
+                                      t_arrival=t, path=topo.path(s, d, fid)))
+                    fid += 1
+            gap = (m - 1) * chunk * 8.0 / (self.max_load * cap)
+            t += float(rng.lognormal(
+                np.log(max(gap, 1e-9)) - self.sigma ** 2 / 2, self.sigma))
+        return flows
+
+
+# workload name -> generator (bound methods of Scenario); the scenarios
+# sweep layer exposes these as the `ScenarioSpec.workload` axis
+WORKLOADS = {
+    "table2": Scenario._gen_table2,
+    "incast": Scenario._gen_incast,
+    "permutation": Scenario._gen_permutation,
+    "all_to_all": Scenario._gen_all_to_all,
+}
+
 
 def sample_scenario(seed: int, *, num_flows: int = 2000,
                     synthetic: bool = True,
                     topo: Optional[FatTree] = None) -> Scenario:
-    """Random point of Table 2. synthetic=True -> training distributions."""
+    """Random point of Table 2. synthetic=True -> training distributions.
+
+    Materializes `sample_point` (one rng stream, fixed draw order) so that
+    `repro.scenarios.random_spec(seed).to_scenario()` is the exact same
+    scenario — the declarative sweep layer and this sampler share one
+    definition of the space.
+    """
     rng = np.random.default_rng(seed)
-    oversub = rng.choice(["1-to-1", "2-to-1", "4-to-1"])
-    topo = topo or paper_train_topo(str(oversub))
-    cc = str(rng.choice(["dctcp", "dcqcn", "timely"]))
-    config = NetConfig(
-        cc=cc,
-        init_window=float(rng.uniform(5e3, 15e3)),
-        buffer_bytes=float(rng.uniform(100e3, 160e3)),
-        dctcp_k=float(rng.uniform(10e3, 30e3)),
-        dcqcn_kmin=float(rng.uniform(10e3, 30e3)),
-        dcqcn_kmax=float(rng.uniform(30e3, 50e3)),
-        timely_tlow=float(rng.uniform(40e-6, 60e-6)),
-        timely_thigh=float(rng.uniform(100e-6, 150e-6)),
-    )
-    dist = str(rng.choice(SYNTH_DISTS)) if synthetic else \
-        str(rng.choice(list(EMPIRICAL.keys())))
+    point = sample_point(rng, synthetic=synthetic)
+    topo = topo or paper_train_topo(str(point["oversub"]))
+    config = NetConfig(cc=str(point["cc"]),
+                       **{k: float(point[k]) for k in NET_KNOBS})
     return Scenario(
-        topo=topo, config=config, size_dist=dist,
-        theta=float(rng.uniform(5e3, 50e3)),
-        sigma=float(rng.choice([1.0, 2.0])),
-        max_load=float(rng.uniform(0.3, 0.8)),
-        matrix=str(rng.choice(["A", "B", "C"])),
+        topo=topo, config=config, size_dist=str(point["size_dist"]),
+        theta=float(point["theta"]), sigma=float(point["sigma"]),
+        max_load=float(point["max_load"]), matrix=str(point["matrix"]),
         num_flows=num_flows, seed=seed)

@@ -1,0 +1,33 @@
+"""repro.scenarios — declarative scenario suites + the sharded sweep engine.
+
+The layer between the Table-2 traffic generator (`repro.data.traffic`,
+§5.1) and the unified backend API (`repro.sim`): define *what* to simulate
+as data (`ScenarioSpec`, `Sweep.grid` / `Sweep.random`, named suites), and
+let `SweepRunner` decide *how* — shape-compatible chunking into
+`Backend.run_many` batches, device sharding via `jax.pmap`, and a
+content-hash-keyed on-disk result cache so overlapping sweeps never
+re-simulate a scenario:
+
+    from repro.sim import get_backend
+    from repro.scenarios import SweepRunner, get_suite
+
+    runner = SweepRunner(get_backend("flowsim_fast"),
+                         cache_dir="results/sweep_cache", chunk_size=8)
+    report = runner.run(get_suite("smoke16"))
+    print(report.table())
+
+CLI: `python -m repro.scenarios <suite>` (see `--list` for suites).
+See docs/SIM_API.md for the backend contract and docs/DESIGN.md §5 for
+the sweep-engine design.
+"""
+from .cache import ResultCache, result_key
+from .runner import SweepEntry, SweepReport, SweepRunner
+from .spec import ScenarioSpec, Sweep, random_spec
+from .suites import SUITES, get_suite, list_suites, register_suite
+
+__all__ = [
+    "ScenarioSpec", "Sweep", "random_spec",
+    "SweepRunner", "SweepReport", "SweepEntry",
+    "ResultCache", "result_key",
+    "SUITES", "get_suite", "list_suites", "register_suite",
+]

@@ -18,6 +18,8 @@ scan across scenarios.
 """
 from __future__ import annotations
 
+import dataclasses
+import hashlib
 from dataclasses import dataclass, field
 from typing import Any, Optional, Sequence, Tuple
 
@@ -25,6 +27,11 @@ import numpy as np
 
 from ..net.packetsim import Flow, NetConfig
 from ..net.topology import FatTree
+
+
+def _hex(x: float) -> str:
+    """Exact, platform-independent float encoding for content hashing."""
+    return float(x).hex()
 
 
 @dataclass(frozen=True)
@@ -61,6 +68,33 @@ class SimRequest:
     @property
     def num_flows(self) -> int:
         return len(self.flows)
+
+    def content_hash(self) -> str:
+        """Stable sha256 over everything that determines simulator output.
+
+        Two requests hash equal iff topology, NetConfig, the full flow list
+        (fid/src/dst/size/arrival/path) and the execution options match —
+        byte-stable across processes and machines (floats are hex-encoded,
+        no Python `hash()`), so it can key the on-disk sweep result cache
+        (`repro.scenarios.ResultCache`). `record_events` is excluded: it
+        changes what is *returned*, not what is simulated.
+        """
+        h = hashlib.sha256()
+        t = self.topo
+        parts = ["topo", t.num_racks, t.hosts_per_rack, t.num_spines,
+                 _hex(t.link_gbps), _hex(t.prop_delay_s), "cfg"]
+        for f in dataclasses.fields(NetConfig):
+            v = getattr(self.config, f.name)
+            parts.append(_hex(v) if isinstance(v, float) else v)
+        parts.append("opts")
+        parts.append("none" if self.until is None else _hex(self.until))
+        parts.append(self.seed)
+        h.update("|".join(map(str, parts)).encode())
+        for f in self.flows:
+            h.update(("|".join(map(str, [f.fid, f.src, f.dst, f.size,
+                                         _hex(f.t_arrival), *f.path]))
+                      + "\n").encode())
+        return h.hexdigest()
 
 
 @dataclass(frozen=True)

@@ -17,6 +17,7 @@ Registry usage:
 from __future__ import annotations
 
 import copy
+import hashlib
 import time
 from typing import Callable, Dict, List, Sequence
 
@@ -62,8 +63,44 @@ class Backend:
         raise NotImplementedError
 
     def run_many(self, requests: Sequence[SimRequest]) -> List[SimResult]:
-        """Batch execution; default is a loop, jax backends vmap."""
+        """Batch execution; default is a loop, jax backends vmap (and shard
+        the vmapped batch across local devices when more than one exists)."""
         return [self.run(r) for r in requests]
+
+    def run_chunked(self, requests: Sequence[SimRequest],
+                    chunk_size: int = None) -> List[SimResult]:
+        """Chunked sharded dispatch: partition `requests` into shape-
+        compatible chunks and `run_many` each.
+
+        Requests are sorted by arena footprint (flow count, then link
+        count) before slicing so each chunk pads to near-uniform shapes —
+        a shape-diverse N-request sweep costs at most ceil(N/chunk_size)
+        batched compiles instead of N retraces (chunks that land on the
+        same padded shape reuse one executable). Results come back in
+        input order. `chunk_size=None` runs everything as one chunk.
+        This is what `repro.scenarios.SweepRunner` dispatches through.
+        """
+        requests = list(requests)
+        if chunk_size is None or chunk_size >= len(requests):
+            return self.run_many(requests)
+        if chunk_size < 1:
+            raise ValueError(f"chunk_size must be >= 1, got {chunk_size}")
+        order = sorted(range(len(requests)),
+                       key=lambda i: (requests[i].num_flows,
+                                      requests[i].topo.num_links))
+        out: List[SimResult] = [None] * len(requests)
+        for lo in range(0, len(order), chunk_size):
+            chunk = order[lo:lo + chunk_size]
+            for i, res in zip(chunk, self.run_many([requests[i]
+                                                    for i in chunk])):
+                out[i] = res
+        return out
+
+    def fingerprint(self) -> str:
+        """Identity string for result caching: two backends with the same
+        fingerprint must produce identical results for the same request.
+        Parameterized backends (m4) extend this with a weights hash."""
+        return self.name
 
     def closed_loop(self, topo, config, flows):
         """Open a `ClosedLoopSession` (dynamic arrivals); optional."""
@@ -179,6 +216,20 @@ class M4Backend(Backend):
                 'm4 backend needs model parameters: '
                 'get_backend("m4", params=params, cfg=cfg)')
         self.params, self.cfg = params, cfg
+        self._fingerprint = None
+
+    def fingerprint(self) -> str:
+        """"m4-<weights hash>": cached results are only valid for the exact
+        parameters (and model shape) that produced them."""
+        if self._fingerprint is None:
+            import jax
+            h = hashlib.sha256(repr(self.cfg).encode())
+            leaves = jax.tree_util.tree_flatten_with_path(self.params)[0]
+            for path, leaf in leaves:
+                h.update(str(path).encode())
+                h.update(np.asarray(leaf).tobytes())
+            self._fingerprint = f"m4-{h.hexdigest()[:16]}"
+        return self._fingerprint
 
     def run(self, request: SimRequest) -> SimResult:
         from ..core.simulate import simulate_open_loop

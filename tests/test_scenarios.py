@@ -1,0 +1,259 @@
+"""repro.scenarios: spec/sampler equivalence, grid sweeps, the on-disk
+result cache, the chunked+sharded SweepRunner compile-count guarantee
+(the acceptance criterion: a 16-scenario shape-diverse sweep costs at
+most ceil(16/chunk) batched compiles and re-runs as a 100% cache hit),
+and the CLI."""
+import os
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.model import M4Config, init_m4
+from repro.data.traffic import sample_scenario
+from repro.scenarios import (ResultCache, ScenarioSpec, Sweep, SweepRunner,
+                             get_suite, list_suites, random_spec, result_key)
+from repro.sim import SimRequest, SimResult, get_backend
+
+TINY = M4Config(hidden=16, gnn_dim=12, mlp_hidden=8, gnn_layers=2,
+                snap_flows=8, snap_links=24)
+
+
+@pytest.fixture(scope="module")
+def tiny_params():
+    return init_m4(jax.random.PRNGKey(0), TINY)
+
+
+def _fast_compiles():
+    from repro.core.flowsim_fast import TRACE_COUNTS
+    return sum(TRACE_COUNTS.values())
+
+
+def _m4_compiles():
+    from repro.core.simulate import TRACE_COUNTS
+    return sum(TRACE_COUNTS.values())
+
+
+# ------------------------------------------------------------------- specs
+def test_random_spec_matches_sample_scenario():
+    """The declarative layer freezes the exact scenarios the legacy
+    sampler draws — same rng stream, same flows."""
+    for seed in [0, 3, 9]:
+        for synthetic in [True, False]:
+            spec = random_spec(seed, num_flows=25, synthetic=synthetic)
+            sc = spec.to_scenario()
+            legacy = sample_scenario(seed, num_flows=25, synthetic=synthetic)
+            assert sc.generate() == legacy.generate()
+            assert sc.config == legacy.config
+
+
+def test_spec_topo_parsing():
+    topo = ScenarioSpec(topo="ft-4x2x3", link_gbps=40.0).build_topo()
+    assert (topo.num_racks, topo.hosts_per_rack, topo.num_spines) == (4, 2, 3)
+    assert topo.link_gbps == 40.0
+    with pytest.raises(ValueError, match="bad topo spec"):
+        ScenarioSpec(topo="ft-4x2").build_topo()
+    with pytest.raises(ValueError, match="unknown topo"):
+        ScenarioSpec(topo="torus-3d").build_topo()
+    with pytest.raises(ValueError, match="unknown workload"):
+        ScenarioSpec(workload="no-such-pattern")
+
+
+def test_grid_sweep_expansion():
+    sw = Sweep.grid("g", ScenarioSpec(num_flows=10),
+                    cc=["dctcp", "timely"], max_load=[0.3, 0.5, 0.7])
+    assert len(sw) == 6
+    assert {(s.cc, s.max_load) for s in sw} == \
+        {(c, l) for c in ["dctcp", "timely"] for l in [0.3, 0.5, 0.7]}
+    assert all(s.num_flows == 10 for s in sw)
+    assert len({s.name for s in sw}) == 6      # point names are unique
+    with pytest.raises(ValueError, match="unknown spec fields"):
+        Sweep.grid("g", ScenarioSpec(), not_a_field=[1])
+
+
+def test_suite_registry():
+    assert "table2_train_space" in list_suites()
+    sw = get_suite("table2_train_space", n=3, num_flows=15)
+    assert len(sw) == 3
+    assert sw.specs[1].to_scenario().generate() == \
+        sample_scenario(1, num_flows=15).generate()
+    with pytest.raises(KeyError):
+        get_suite("no-such-suite")
+
+
+# ------------------------------------------------------------------- cache
+def test_result_cache_roundtrip(tmp_path):
+    cache = ResultCache(str(tmp_path))
+    req = SimRequest.from_scenario(sample_scenario(2, num_flows=12))
+    backend = get_backend("flowsim")
+    res = backend.run(req)
+    key = result_key(req, backend)
+    assert key not in cache and cache.get(key) is None
+    cache.put(key, res)
+    assert key in cache
+    back = cache.get(key)
+    np.testing.assert_array_equal(back.fcts, res.fcts)
+    np.testing.assert_array_equal(back.slowdowns, res.slowdowns)
+    assert back.backend == "flowsim" and back.wall_time == res.wall_time
+
+
+def test_result_cache_corruption_is_a_miss(tmp_path):
+    cache = ResultCache(str(tmp_path))
+    req = SimRequest.from_scenario(sample_scenario(2, num_flows=12))
+    backend = get_backend("flowsim")
+    key = result_key(req, backend)
+    cache.put(key, backend.run(req))
+    with open(cache._path(key), "wb") as f:
+        f.write(b"garbage")
+    assert cache.get(key) is None          # corrupt entry reads as miss
+    assert key not in cache                # ... and is removed
+
+
+def test_result_key_separates_backends(tiny_params):
+    req = SimRequest.from_scenario(sample_scenario(0, num_flows=10))
+    k_fs = result_key(req, get_backend("flowsim"))
+    k_m4 = result_key(req, get_backend("m4", params=tiny_params, cfg=TINY))
+    assert k_fs != k_m4
+    # and different weights -> different key
+    other = init_m4(jax.random.PRNGKey(1), TINY)
+    k_m4b = result_key(req, get_backend("m4", params=other, cfg=TINY))
+    assert k_m4 != k_m4b
+
+
+# -------------------------------------------------- chunked dispatch order
+def test_run_chunked_preserves_input_order():
+    reqs = [SimRequest.from_scenario(sample_scenario(s, num_flows=10 + 3 * s))
+            for s in range(5)]
+    backend = get_backend("flowsim_fast")
+    looped = [backend.run(r) for r in reqs]
+    chunked = backend.run_chunked(list(reversed(reqs)), chunk_size=2)
+    for l, c in zip(reversed(looped), chunked):
+        np.testing.assert_allclose(c.fcts, l.fcts, rtol=1e-4)
+
+
+# ------------------------------------------- acceptance: 16-scenario sweep
+def test_sweep_16_shape_diverse_flowsim_fast(tmp_path):
+    """≥16 shape-diverse scenarios, chunk=8: at most ceil(16/8)=2 batched
+    compiles; the re-run is a 100% cache hit with zero compiles."""
+    suite = get_suite("smoke16", num_flows=12)
+    assert len(suite) == 16
+    assert len({(s.to_request().num_flows) for s in suite}) > 4  # diverse
+    runner = SweepRunner(get_backend("flowsim_fast"),
+                         cache_dir=str(tmp_path), chunk_size=8)
+    c0 = _fast_compiles()
+    report = runner.run(suite)
+    assert _fast_compiles() - c0 <= 2
+    assert report.misses == 16 and report.hits == 0
+    for e in report.entries:
+        assert e.result.fcts.shape == (e.request.num_flows,)
+        assert np.isfinite(e.result.fcts).all()
+
+    c1 = _fast_compiles()
+    again = runner.run(suite)
+    assert _fast_compiles() == c1                  # zero new compiles
+    assert again.hits == 16 and again.misses == 0  # 100% cache hit
+    for a, b in zip(report.entries, again.entries):
+        np.testing.assert_array_equal(a.result.fcts, b.result.fcts)
+
+
+def test_sweep_16_shape_diverse_m4(tiny_params, tmp_path):
+    suite = get_suite("smoke16", num_flows=12)
+    backend = get_backend("m4", params=tiny_params, cfg=TINY)
+    runner = SweepRunner(backend, cache_dir=str(tmp_path), chunk_size=8)
+    c0 = _m4_compiles()
+    report = runner.run(suite)
+    assert _m4_compiles() - c0 <= 2
+    assert report.misses == 16
+    c1 = _m4_compiles()
+    again = runner.run(suite)
+    assert _m4_compiles() == c1
+    assert again.hits == 16
+
+
+def test_sweep_cached_results_match_fresh(tmp_path):
+    """Cache round-trip through the runner: cached fcts == fresh fcts."""
+    suite = get_suite("smoke16", num_flows=12).limit(4)
+    fresh = SweepRunner(get_backend("flowsim_fast"), cache_dir=None,
+                        chunk_size=None).run(suite)
+    runner = SweepRunner(get_backend("flowsim_fast"),
+                         cache_dir=str(tmp_path), chunk_size=None)
+    runner.run(suite)
+    cached = runner.run(suite)
+    assert cached.hits == 4
+    for f, c in zip(fresh.entries, cached.entries):
+        np.testing.assert_allclose(c.result.fcts, f.result.fcts, rtol=1e-6)
+
+
+def test_sweep_record_events_bypasses_cache(tmp_path):
+    """Cached entries carry no event log / raw, so record_events=True must
+    not be served from (or poison) the cache."""
+    suite = get_suite("smoke16", num_flows=10).limit(2)
+    runner = SweepRunner(get_backend("packet"), cache_dir=str(tmp_path),
+                         chunk_size=None)
+    runner.run(suite)                                   # warm the cache
+    rep = runner.run(suite, record_events=True)
+    assert rep.hits == 0                                # bypassed, not hit
+    for e in rep.entries:
+        assert e.result.event_times is not None and e.result.raw is not None
+    assert runner.run(suite).hits == 2                  # cache intact
+
+
+# --------------------------------------------------------- device sharding
+def test_sharded_batch_matches_reference_subprocess():
+    """With >1 (forced host) device, run_many takes the pmap path on BOTH
+    jax backends and must match per-request `run` results; one sharded
+    compile per backend for the batch."""
+    code = """
+import numpy as np, jax
+assert jax.local_device_count() == 2, jax.devices()
+from repro.data.traffic import sample_scenario
+from repro.sim import SimRequest, get_backend
+from repro.core.flowsim_fast import TRACE_COUNTS as FAST_COUNTS
+from repro.core.simulate import TRACE_COUNTS as M4_COUNTS
+from repro.core.model import M4Config, init_m4
+reqs = [SimRequest.from_scenario(sample_scenario(s, num_flows=12 + 4 * s))
+        for s in range(3)]
+b = get_backend("flowsim_fast")
+batched = b.run_many(reqs)
+assert FAST_COUNTS["event_scan_sharded"] == 1, dict(FAST_COUNTS)
+for r, res in zip(reqs, batched):
+    np.testing.assert_allclose(res.fcts, b.run(r).fcts, rtol=1e-4)
+cfg = M4Config(hidden=16, gnn_dim=12, mlp_hidden=8, gnn_layers=2,
+               snap_flows=8, snap_links=24)
+m4 = get_backend("m4", params=init_m4(jax.random.PRNGKey(0), cfg), cfg=cfg)
+m4_batched = m4.run_many(reqs)
+assert M4_COUNTS["open_loop_sharded"] == 1, dict(M4_COUNTS)
+for r, res in zip(reqs, m4_batched):
+    np.testing.assert_allclose(res.fcts, m4.run(r).fcts, rtol=2e-4,
+                               atol=1e-9)
+print("sharded-ok")
+"""
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=2",
+               JAX_PLATFORMS="cpu",
+               PYTHONPATH=os.path.join(os.path.dirname(__file__), "..",
+                                       "src"))
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=300)
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "sharded-ok" in out.stdout
+
+
+# --------------------------------------------------------------------- CLI
+def test_cli_list_and_run(capsys, tmp_path):
+    from repro.scenarios.__main__ import main
+    assert main(["--list"]) == 0
+    assert "smoke16" in capsys.readouterr().out
+    rc = main(["smoke16", "--limit", "3", "--num-flows", "10",
+               "--backend", "flowsim", "--chunk", "2",
+               "--cache-dir", str(tmp_path)])
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert "3 scenarios via flowsim" in out
+    # second run: all served from cache
+    assert main(["smoke16", "--limit", "3", "--num-flows", "10",
+                 "--backend", "flowsim", "--chunk", "2",
+                 "--cache-dir", str(tmp_path)]) == 0
+    assert "3 cached / 0 simulated" in capsys.readouterr().out

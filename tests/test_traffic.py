@@ -1,0 +1,137 @@
+"""Traffic layer: generator determinism, max-link-load targeting,
+empirical-CDF size bounds, the declarative Table-2 space, and the
+beyond-paper workload families (incast / permutation / all_to_all /
+mixed)."""
+import numpy as np
+import pytest
+
+from repro.data.traffic import (EMPIRICAL, NET_KNOBS, SIZE_BOUNDS,
+                                SYNTH_DISTS, TABLE2_SPACE, WORKLOADS,
+                                Scenario, sample_point, sample_scenario,
+                                sample_sizes)
+from repro.net.packetsim import NetConfig
+from repro.net.topology import paper_train_topo
+
+
+def scenario(workload="table2", **kw):
+    base = dict(topo=paper_train_topo("2-to-1"), config=NetConfig(),
+                num_flows=60, seed=11, workload=workload,
+                fan_in=5, participants=4)
+    base.update(kw)
+    return Scenario(**base)
+
+
+# -------------------------------------------------------------- determinism
+@pytest.mark.parametrize("workload", sorted(WORKLOADS))
+def test_generate_deterministic_under_fixed_seed(workload):
+    sc = scenario(workload)
+    a, b = sc.generate(), sc.generate()
+    assert a == b
+    assert [f.fid for f in a] == list(range(sc.num_flows))
+    # a different seed must actually change the flows
+    assert scenario(workload, seed=12).generate() != a
+
+
+def test_sample_scenario_deterministic():
+    a = sample_scenario(5, num_flows=30)
+    b = sample_scenario(5, num_flows=30)
+    assert (a.size_dist, a.theta, a.max_load, a.config.cc) == \
+        (b.size_dist, b.theta, b.max_load, b.config.cc)
+    assert a.generate() == b.generate()
+
+
+def test_unknown_workload_raises():
+    with pytest.raises(ValueError, match="unknown workload"):
+        scenario("no-such-pattern").generate()
+
+
+# ------------------------------------------------------------ load targeting
+@pytest.mark.parametrize("target", [0.3, 0.5, 0.8])
+def test_max_load_targeting_within_tolerance(target):
+    """The lognormal inter-arrival scaling must land the busiest link's
+    offered load near `max_load` (measured over the arrival span)."""
+    sc = scenario(max_load=target, num_flows=2000, seed=3)
+    flows = sc.generate()
+    per_link = np.zeros(sc.topo.num_links)
+    for f in flows:
+        for l in f.path:
+            per_link[l] += f.size * 8.0
+    span = max(f.t_arrival for f in flows) - min(f.t_arrival for f in flows)
+    achieved = per_link.max() / (span * sc.topo.capacity.max())
+    assert achieved == pytest.approx(target, rel=0.15)
+
+
+# ------------------------------------------------------------------- sizes
+@pytest.mark.parametrize("dist", list(EMPIRICAL) + ["mixed"])
+def test_empirical_sizes_within_bounds(dist):
+    rng = np.random.default_rng(0)
+    s = sample_sizes(rng, dist, 5000)
+    lo, hi = SIZE_BOUNDS
+    assert s.min() >= lo and s.max() <= hi
+    assert len(np.unique(s)) > 100        # a real distribution, not a point
+
+
+def test_mixed_sizes_deterministic_and_spanning():
+    a = sample_sizes(np.random.default_rng(7), "mixed", 2000)
+    b = sample_sizes(np.random.default_rng(7), "mixed", 2000)
+    np.testing.assert_array_equal(a, b)
+    # mixture must reach both the small-response and large-shuffle regimes
+    assert a.min() < 1e3 and a.max() > 1e5
+
+
+# ------------------------------------------------------- declarative space
+def test_sample_point_respects_space():
+    rng = np.random.default_rng(1)
+    p = sample_point(rng, synthetic=True)
+    assert set(p) == set(TABLE2_SPACE)
+    for name, axis in TABLE2_SPACE.items():
+        if name == "size_dist":
+            assert p[name] in SYNTH_DISTS
+        elif axis[0] == "choice":
+            assert p[name] in axis[1]
+        else:
+            assert axis[1] <= p[name] <= axis[2]
+    p_emp = sample_point(np.random.default_rng(1), synthetic=False)
+    assert p_emp["size_dist"] in EMPIRICAL
+    assert set(NET_KNOBS) <= set(TABLE2_SPACE)
+
+
+# --------------------------------------------------------- workload shapes
+def test_incast_structure():
+    sc = scenario("incast", fan_in=5, num_flows=23)
+    flows = sc.generate()
+    dsts = {f.dst for f in flows}
+    assert len(dsts) == 1                 # one aggregator
+    agg = dsts.pop()
+    assert all(f.src != agg for f in flows)
+    waves = {}
+    for f in flows:
+        waves.setdefault(f.t_arrival, []).append(f)
+    assert max(len(w) for w in waves.values()) == 5   # full fan-in bursts
+    for w in waves.values():              # senders distinct within a wave
+        assert len({f.src for f in w}) == len(w)
+
+
+def test_permutation_structure():
+    sc = scenario("permutation", participants=4, num_flows=20)
+    flows = sc.generate()
+    rounds = {}
+    for f in flows:
+        rounds.setdefault(f.t_arrival, []).append(f)
+    for rnd in rounds.values():
+        assert len(rnd) <= 4
+        # a permutation: in/out degree 1, no self-flows
+        assert len({f.src for f in rnd}) == len(rnd)
+        assert len({f.dst for f in rnd}) == len(rnd)
+        assert all(f.src != f.dst for f in rnd)
+
+
+def test_all_to_all_structure():
+    sc = scenario("all_to_all", participants=4, num_flows=12, theta=30e3)
+    flows = sc.generate()
+    first_t = min(f.t_arrival for f in flows)
+    first = [f for f in flows if f.t_arrival == first_t]
+    pairs = {(f.src, f.dst) for f in first}
+    assert len(first) == 12               # 4*(4-1) = one full exchange
+    assert len(pairs) == 12 and all(s != d for s, d in pairs)
+    assert len({f.size for f in flows}) == 1   # equal chunks
