@@ -1,7 +1,10 @@
 """TPU-resident flowSim (beyond-paper): the entire max-min event loop as a
-single `lax.scan` of 2N flow-level events over dense incidence matmuls,
-with the per-round masked row-min available as the Pallas kernel
-(`repro.kernels.waterfill`). This gives classical flowSim the same
+single `lax.scan` of 2N flow-level events over dense incidence matmuls.
+The per-round masked row-min executes through `repro.kernels.dispatch`:
+the Pallas kernel (`repro.kernels.waterfill`) on TPU (or under
+REPRO_KERNELS=pallas|interpret), the jnp reference otherwise — the
+resolved mode is a static jit argument, so flipping it retraces instead
+of reusing a stale executable. This gives classical flowSim the same
 accelerator-friendly execution model that m4's learned step enjoys — the
 paper's Table-4 scaling argument applied back to the baseline.
 
@@ -19,9 +22,13 @@ from __future__ import annotations
 import time
 from collections import Counter
 
+from functools import partial
+
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from ..kernels import dispatch
 
 BIG = 1e30
 
@@ -29,9 +36,12 @@ BIG = 1e30
 TRACE_COUNTS = Counter()
 
 
-def _waterfill_masked(a, cap, active, *, max_rounds=32):
+def _waterfill_masked(a, cap, active, *, max_rounds=32, mode="xla"):
     """Max-min rates for the active subset. a: (N, L) incidence; returns
-    rates (N,) with zeros for inactive flows."""
+    rates (N,) with zeros for inactive flows. The inner masked row-min
+    (each flow's bottleneck share) runs via `repro.kernels.dispatch` —
+    the Pallas kernel in pallas/interpret mode, jnp otherwise; parity is
+    tested in tests/test_kernels.py."""
     N, L = a.shape
 
     def cond(st):
@@ -45,7 +55,7 @@ def _waterfill_masked(a, cap, active, *, max_rounds=32):
         used = (rates * frozen) @ a
         avail = jnp.maximum(cap - used, 0.0)
         share = jnp.where(n_l > 0, avail / jnp.maximum(n_l, 1.0), BIG)
-        f_share = jnp.min(jnp.where(a > 0, share[None, :], BIG), axis=1)
+        f_share = dispatch.masked_rowmin(a, share, mode=mode)
         theta = jnp.min(jnp.where(u > 0, f_share, BIG))
         newly = (u > 0) & (f_share <= theta * (1 + 1e-9))
         rates = jnp.where(newly, f_share, rates)
@@ -57,12 +67,13 @@ def _waterfill_masked(a, cap, active, *, max_rounds=32):
     return jnp.where(active, rates, 0.0)
 
 
-def _event_scan_core(a, cap, sizes_bits, arr_times, arr_order):
+def _event_scan_core(a, cap, sizes_bits, arr_times, arr_order, mode="xla",
+                     num_events=None):
     N = sizes_bits.shape[0]
 
     def body(carry, _):
         remaining, active, done, ptr, t, fct = carry
-        rates = _waterfill_masked(a, cap, active)
+        rates = _waterfill_masked(a, cap, active, mode=mode)
         tta = jnp.where(active & (rates > 0), remaining / jnp.maximum(rates, 1e-9), BIG)
         dep_i = jnp.argmin(tta)
         next_dep = t + tta[dep_i]
@@ -83,29 +94,40 @@ def _event_scan_core(a, cap, sizes_bits, arr_times, arr_order):
 
     init = (jnp.zeros((N,)), jnp.zeros((N,), bool), jnp.zeros((N,), bool),
             jnp.int32(0), 0.0, jnp.zeros((N,)))
+    length = 2 * N if num_events is None else num_events
     (remaining, active, done, ptr, t, fct), _ = jax.lax.scan(
-        body, init, None, length=2 * N)
+        body, init, None, length=length)
     return fct  # completion TIMES (absolute); caller subtracts arrivals
 
 
-@jax.jit
-def _event_scan(a, cap, sizes_bits, arr_times, arr_order):
+@partial(jax.jit, static_argnames=("mode", "num_events"))
+def _event_scan(a, cap, sizes_bits, arr_times, arr_order, mode="xla",
+                num_events=None):
     TRACE_COUNTS["event_scan"] += 1
-    return _event_scan_core(a, cap, sizes_bits, arr_times, arr_order)
+    return _event_scan_core(a, cap, sizes_bits, arr_times, arr_order, mode,
+                            num_events)
 
 
-@jax.jit
-def _event_scan_batched(a, cap, sizes_bits, arr_times, arr_order):
+@partial(jax.jit, static_argnames=("mode",))
+def _event_scan_batched(a, cap, sizes_bits, arr_times, arr_order, mode="xla"):
     TRACE_COUNTS["event_scan_batched"] += 1
-    return jax.vmap(_event_scan_core)(a, cap, sizes_bits, arr_times, arr_order)
+
+    def one(*leaves):
+        return _event_scan_core(*leaves, mode)
+
+    return jax.vmap(one)(a, cap, sizes_bits, arr_times, arr_order)
 
 
-@jax.pmap
-def _event_scan_sharded(a, cap, sizes_bits, arr_times, arr_order):
+@partial(jax.pmap, static_broadcasted_argnums=(5,))
+def _event_scan_sharded(a, cap, sizes_bits, arr_times, arr_order, mode):
     """pmap(vmap(scan)): leading axis = local devices, second = scenarios
     per device. One compile serves the whole sharded sweep chunk."""
     TRACE_COUNTS["event_scan_sharded"] += 1
-    return jax.vmap(_event_scan_core)(a, cap, sizes_bits, arr_times, arr_order)
+
+    def one(*leaves):
+        return _event_scan_core(*leaves, mode)
+
+    return jax.vmap(one)(a, cap, sizes_bits, arr_times, arr_order)
 
 
 def _pack(topo, flows, n_total=None, l_total=None):
@@ -141,10 +163,11 @@ def _result(topo, flows, fct_abs, wall):
 def run_flowsim_fast(topo, flows):
     """Drop-in fast path for `run_flowsim` (fcts + slowdowns only)."""
     a, cap, sizes, times, order = _pack(topo, flows)
+    mode = dispatch.resolve_mode()
     t0 = time.perf_counter()
     fct_abs = np.asarray(_event_scan(
         jnp.asarray(a), jnp.asarray(cap), jnp.asarray(sizes),
-        jnp.asarray(times), jnp.asarray(order)))
+        jnp.asarray(times), jnp.asarray(order), mode=mode))
     wall = time.perf_counter() - t0
     return _result(topo, flows, fct_abs, wall)
 
@@ -160,14 +183,15 @@ def run_flowsim_fast_batch(scenarios):
     packed = [_pack(topo, flows, n_total=n_max, l_total=l_max)
               for topo, flows in scenarios]
     stacked = [jnp.asarray(np.stack(col)) for col in zip(*packed)]
+    mode = dispatch.resolve_mode()
     D = jax.local_device_count()
     t0 = time.perf_counter()
     if D > 1 and len(scenarios) >= D:
         from .sharding import shard_leaves, unshard
         fct_abs = unshard(np.asarray(_event_scan_sharded(
-            *shard_leaves(stacked, D))), len(scenarios))
+            *shard_leaves(stacked, D), mode)), len(scenarios))
     else:
-        fct_abs = np.asarray(_event_scan_batched(*stacked))
+        fct_abs = np.asarray(_event_scan_batched(*stacked, mode=mode))
     wall = time.perf_counter() - t0
     return [_result(topo, flows, fct_abs[b], wall / len(scenarios))
             for b, (topo, flows) in enumerate(scenarios)]

@@ -8,8 +8,10 @@ embeddings, 200-d 2-layer MLPs, 9-d network-config vector input.
 
 TPU adaptation (DESIGN.md §3): snapshots are fixed-size padded index sets
 (SNAP_F flows, SNAP_L links, max path P), so one event step is a single
-static XLA program; message passing is gather + segment-sum, implemented
-optionally by the Pallas kernel in `repro.kernels.bipartite`.
+static XLA program. The GRU cells and GNN rounds execute through
+`repro.kernels.dispatch` — compiled Pallas kernels on TPU, the jnp
+reference path elsewhere, overridable with REPRO_KERNELS
+(`M4Config.kernel_mode` pins the resolved mode into the jit cache key).
 """
 from __future__ import annotations
 
@@ -19,7 +21,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from ..nn import gru_cell, gru_init, linear, linear_init, mlp, mlp_init
+from ..nn import gru_init, linear, linear_init, mlp, mlp_init
 
 
 @dataclass(frozen=True)
@@ -33,7 +35,17 @@ class M4Config:
     max_path: int = 8        # P
     cfg_dim: int = 9
     dense_sldn: bool = True
-    use_pallas: bool = False  # bipartite message passing via Pallas kernel
+    # Kernel execution mode for the GRU/GNN hot path: None = auto (TPU ->
+    # compiled Pallas, else jnp), or one of repro.kernels.dispatch.MODES.
+    # Entry points pin this to a concrete mode (dispatch.canonicalize_cfg)
+    # so it lands in the jit cache key; REPRO_KERNELS overrides it.
+    kernel_mode: str | None = None
+
+    @property
+    def use_pallas(self) -> bool:
+        """True when the resolved mode runs the Pallas kernel code."""
+        from ..kernels.dispatch import resolve_mode
+        return resolve_mode(self.kernel_mode) != "xla"
 
     @property
     def flow_feat(self):
@@ -101,17 +113,26 @@ def _bipartite_round(layer, f_emb, l_emb, edge_f, edge_l, edge_mask, n_links):
     return f_new, l_new
 
 
-def gnn_forward(params, cfg: M4Config, f_h, l_h, edge_f, edge_l, edge_mask):
-    """f_h: (SNAP_F, H), l_h: (SNAP_L, H) -> GNN embeddings (·, G)."""
+def gnn_forward(params, cfg: M4Config, f_h, l_h, edge_f, edge_l, edge_mask,
+                ref_impl=False):
+    """f_h: (SNAP_F, H), l_h: (SNAP_L, H) -> GNN embeddings (·, G).
+
+    `ref_impl=True` forces the original segment-sum formulation (the seed
+    program) regardless of kernel mode — kept as the oracle behind the
+    legacy dense event step and the kernel parity tests; the production
+    path goes through `repro.kernels.dispatch` (incidence matmuls on XLA,
+    the fused Pallas kernel on TPU — same math, different execution)."""
+    from ..kernels import dispatch
     f = jax.nn.relu(linear(params["proj_f"], f_h))
     l = jax.nn.relu(linear(params["proj_l"], l_h))
-    if cfg.use_pallas:
-        from ..kernels.bipartite.ops import bipartite_rounds
-        return bipartite_rounds(params["gnn"], f, l, edge_f, edge_l, edge_mask)
-    for layer in params["gnn"]:
-        f, l = _bipartite_round(layer, f, l, edge_f, edge_l, edge_mask,
-                                cfg.snap_links)
-    return f, l
+    if ref_impl:
+        for layer in params["gnn"]:
+            f, l = _bipartite_round(layer, f, l, edge_f, edge_l, edge_mask,
+                                    cfg.snap_links)
+        return f, l
+    return dispatch.gnn_rounds(params["gnn"], f, l, edge_f, edge_l,
+                               edge_mask, cfg.snap_links,
+                               mode=dispatch.resolve_mode(cfg.kernel_mode))
 
 
 # ---------------------------------------------------------------- queries
@@ -136,23 +157,40 @@ def predict_queue(params, link_h):
 
 # ---------------------------------------------------------------- one event
 def temporal_update(params, cfg: M4Config, f_h, l_h, dt_f, dt_l,
-                    f_feat, l_feat, cfg_vec):
-    """GRU-1 / GRU-A temporal advance of snapshot states."""
+                    f_feat, l_feat, cfg_vec, ref_impl=False):
+    """GRU-1 / GRU-A temporal advance of snapshot states (`ref_impl=True`
+    runs the seed program: two independent reference cells)."""
+    from ..kernels import dispatch
+    mode = "xla" if ref_impl else dispatch.resolve_mode(cfg.kernel_mode)
     Bf, Bl = f_h.shape[0], l_h.shape[0]
     cf = jnp.broadcast_to(cfg_vec, (Bf, cfg_vec.shape[-1]))
     cl = jnp.broadcast_to(cfg_vec, (Bl, cfg_vec.shape[-1]))
     xin_f = jnp.concatenate([time_feat(dt_f)[:, None], f_feat, cf], -1)
     xin_l = jnp.concatenate([time_feat(dt_l)[:, None], l_feat, cl], -1)
-    return gru_cell(params["gru1"], xin_f, f_h), gru_cell(params["gruA"], xin_l, l_h)
+    if ref_impl:
+        from ..nn.layers import gru_cell as gru_ref
+        return (gru_ref(params["gru1"], xin_f, f_h),
+                gru_ref(params["gruA"], xin_l, l_h))
+    return dispatch.gru_cell_pair(params["gru1"], params["gruA"],
+                                  xin_f, f_h, xin_l, l_h, mode=mode)
 
 
 def spatial_update(params, cfg: M4Config, f_h, l_h, edge_f, edge_l, edge_mask,
-                   cfg_vec):
-    """GNN + GRU-2/GRU-B state refresh."""
-    gf, gl = gnn_forward(params, cfg, f_h, l_h, edge_f, edge_l, edge_mask)
+                   cfg_vec, ref_impl=False):
+    """GNN + GRU-2/GRU-B state refresh (`ref_impl` as in `gnn_forward`)."""
+    from ..kernels import dispatch
+    mode = "xla" if ref_impl else dispatch.resolve_mode(cfg.kernel_mode)
+    gf, gl = gnn_forward(params, cfg, f_h, l_h, edge_f, edge_l, edge_mask,
+                         ref_impl=ref_impl)
     Bf, Bl = f_h.shape[0], l_h.shape[0]
     cf = jnp.broadcast_to(cfg_vec, (Bf, cfg_vec.shape[-1]))
     cl = jnp.broadcast_to(cfg_vec, (Bl, cfg_vec.shape[-1]))
-    f_new = gru_cell(params["gru2"], jnp.concatenate([gf, cf], -1), f_h)
-    l_new = gru_cell(params["gruB"], jnp.concatenate([gl, cl], -1), l_h)
-    return f_new, l_new
+    if ref_impl:   # seed program: two independent reference cells
+        from ..nn.layers import gru_cell as gru_ref
+        f_new = gru_ref(params["gru2"], jnp.concatenate([gf, cf], -1), f_h)
+        l_new = gru_ref(params["gruB"], jnp.concatenate([gl, cl], -1), l_h)
+        return f_new, l_new
+    return dispatch.gru_cell_pair(params["gru2"], params["gruB"],
+                                  jnp.concatenate([gf, cf], -1), f_h,
+                                  jnp.concatenate([gl, cl], -1), l_h,
+                                  mode=mode)

@@ -28,6 +28,11 @@ def _as_jnp(b: EventBatch):
 
 def event_scan_losses(params, cfg: M4Config, b):
     """Scan all K events of one sim; returns per-head mean L1 losses."""
+    import dataclasses
+    # training differentiates through the event step: force the jnp kernel
+    # path — the Pallas kernels (repro.kernels.*) define no VJP, so a cfg
+    # or REPRO_KERNELS resolving to pallas/interpret would crash grad
+    cfg = dataclasses.replace(cfg, kernel_mode="xla")
     N, L = b["flow_links"].shape[0], b["link_feat"].shape[0]
     H = params["gru1"]["wh"].shape[0]
     cfg_vec = b["cfg_vec"]

@@ -1,3 +1,12 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas TPU kernels for the simulator hot paths + the runtime dispatch
+that decides whether they (or their jnp references) execute.
+
+Three kernel packages (kernel.py + ops.py wrapper + ref.py oracle):
+`fused_gru` (the GRU cell of m4's temporal/post-GNN updates), `bipartite`
+(one fused GraphSAGE round on the flow-link snapshot graph), `waterfill`
+(the masked row-min inside max-min water-filling). `dispatch` is the one
+switch that routes `repro.core.model` and `repro.core.flowsim_fast`
+through them — platform probe + ``REPRO_KERNELS`` override; see
+docs/SIM_API.md.
+"""
+from . import dispatch  # noqa: F401

@@ -1,5 +1,6 @@
 """jit'd wrapper: padding to MXU-aligned shapes + multi-round driver used by
-`repro.core.model.gnn_forward` when M4Config.use_pallas is set."""
+`repro.core.model.gnn_forward` when `repro.kernels.dispatch` resolves to a
+Pallas mode ("pallas" on TPU, "interpret" elsewhere)."""
 from __future__ import annotations
 
 import jax.numpy as jnp

@@ -23,3 +23,20 @@ def bipartite_round_ref(f_emb, l_emb, edge_f, edge_l, edge_mask, wf, wl, bf, bl)
     f_new = jax.nn.relu(jnp.concatenate([f_emb, agg_f], -1) @ wf + bf)
     l_new = jax.nn.relu(jnp.concatenate([l_emb, agg_l], -1) @ wl + bl)
     return f_new, l_new
+
+
+def bipartite_rounds_matmul(layers, f_emb, l_emb, m):
+    """Multi-round GraphSAGE via the incidence-matmul formulation — the
+    exact math the Pallas kernel runs (agg_f = M @ l, agg_l = Mᵀ @ f), as
+    plain XLA matmuls. This is the jnp hot path on CPU: building M once
+    and reusing it across rounds replaces 2·rounds segment-sum scatters
+    (slow row-loops on CPU) with dense MXU/SIMD-friendly matmuls."""
+    for layer in layers:
+        agg_f = m @ l_emb
+        agg_l = m.T @ f_emb
+        wf, bf = layer["wf"]["w"], layer["wf"]["b"]
+        wl, bl = layer["wl"]["w"], layer["wl"]["b"]
+        G = f_emb.shape[1]
+        f_emb = jax.nn.relu(f_emb @ wf[:G] + agg_f @ wf[G:] + bf)
+        l_emb = jax.nn.relu(l_emb @ wl[:G] + agg_l @ wl[G:] + bl)
+    return f_emb, l_emb

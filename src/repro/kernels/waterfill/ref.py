@@ -5,7 +5,10 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-INF = jnp.float32(3.4e38)
+# plain float, NOT a jnp constant: this module is imported lazily from
+# inside jitted functions (repro.kernels.dispatch), and a module-level jnp
+# array created mid-trace would be captured as a tracer and leak
+INF = 3.4e38
 
 
 def masked_rowmin_ref(a, share):

@@ -172,6 +172,13 @@ class FlowSimFastBackend(Backend):
 
     name = "flowsim_fast"
 
+    def fingerprint(self) -> str:
+        """"flowsim_fast-k<mode>": the resolved kernel mode (Pallas vs jnp
+        row-min, see repro.kernels.dispatch) is part of the identity so
+        cached sweep results never mix kernel paths."""
+        from ..kernels.dispatch import resolve_mode
+        return f"{self.name}-k{resolve_mode()}"
+
     def run(self, request: SimRequest) -> SimResult:
         from ..core.flowsim_fast import run_flowsim_fast
         self._check(request)
@@ -215,12 +222,16 @@ class M4Backend(Backend):
             raise ValueError(
                 'm4 backend needs model parameters: '
                 'get_backend("m4", params=params, cfg=cfg)')
-        self.params, self.cfg = params, cfg
+        from ..kernels.dispatch import canonicalize_cfg
+        self.params, self.cfg = params, canonicalize_cfg(cfg)
         self._fingerprint = None
 
     def fingerprint(self) -> str:
-        """"m4-<weights hash>": cached results are only valid for the exact
-        parameters (and model shape) that produced them."""
+        """"m4-<weights hash>-k<mode>": cached results are only valid for
+        the exact parameters (and model shape) that produced them, and for
+        the resolved kernel mode (Pallas vs jnp execution paths are not
+        bitwise identical). The mode is pinned at backend construction
+        (`canonicalize_cfg`)."""
         if self._fingerprint is None:
             import jax
             h = hashlib.sha256(repr(self.cfg).encode())
@@ -228,7 +239,8 @@ class M4Backend(Backend):
             for path, leaf in leaves:
                 h.update(str(path).encode())
                 h.update(np.asarray(leaf).tobytes())
-            self._fingerprint = f"m4-{h.hexdigest()[:16]}"
+            self._fingerprint = \
+                f"m4-{h.hexdigest()[:16]}-k{self.cfg.kernel_mode}"
         return self._fingerprint
 
     def run(self, request: SimRequest) -> SimResult:

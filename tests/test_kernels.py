@@ -105,6 +105,69 @@ def test_waterfill_maxmin_properties(F, L, seed):
         assert sat.any(), "flow not bottlenecked anywhere (not max-min)"
 
 
+# ------------------------------------------------------------- dispatch
+def test_gru_cell_pair_fused_matches_separate():
+    """The block-structured fused flow+link GRU pair (dispatch "xla" hot
+    path) must match two independent reference cells."""
+    from repro.kernels.dispatch import gru_cell_pair
+    from repro.nn.layers import gru_init
+    rng = np.random.default_rng(7)
+    key = jax.random.PRNGKey(7)
+    for Bf, Df, Bl, Dl, H in [(8, 13, 24, 11, 32), (16, 74, 48, 74, 96)]:
+        p_f = gru_init(jax.random.fold_in(key, 0), Df, H)
+        p_l = gru_init(jax.random.fold_in(key, 1), Dl, H)
+        x_f = jnp.asarray(rng.normal(size=(Bf, Df)), jnp.float32)
+        x_l = jnp.asarray(rng.normal(size=(Bl, Dl)), jnp.float32)
+        h_f = jnp.asarray(rng.normal(size=(Bf, H)), jnp.float32)
+        h_l = jnp.asarray(rng.normal(size=(Bl, H)), jnp.float32)
+        ff, ll = gru_cell_pair(p_f, p_l, x_f, h_f, x_l, h_l, mode="xla")
+        rf = gru_cell_ref(x_f, h_f, p_f["wi"], p_f["wh"], p_f["bi"], p_f["bh"])
+        rl = gru_cell_ref(x_l, h_l, p_l["wi"], p_l["wh"], p_l["bi"], p_l["bh"])
+        np.testing.assert_allclose(np.asarray(ff), np.asarray(rf),
+                                   rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(ll), np.asarray(rl),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_bipartite_matmul_formulation_matches_segment_sum():
+    """dispatch's "xla" GNN path (incidence matmuls — the Pallas kernel's
+    math) equals the seed's segment-sum rounds."""
+    from repro.kernels.dispatch import gnn_rounds
+    from repro.nn.layers import linear_init
+    rng = np.random.default_rng(11)
+    key = jax.random.PRNGKey(11)
+    SF, SL, G, P, R = 16, 48, 24, 8, 3
+    layers = [{"wf": linear_init(jax.random.fold_in(key, 2 * i), 2 * G, G),
+               "wl": linear_init(jax.random.fold_in(key, 2 * i + 1), 2 * G, G)}
+              for i in range(R)]
+    f = jnp.asarray(rng.normal(size=(SF, G)), jnp.float32)
+    l = jnp.asarray(rng.normal(size=(SL, G)), jnp.float32)
+    edge_f = jnp.repeat(jnp.arange(SF), P)
+    edge_l = jnp.asarray(rng.integers(0, SL, SF * P), jnp.int32)
+    edge_mask = jnp.asarray(rng.random(SF * P) < 0.7, jnp.float32)
+    gf, gl = gnn_rounds(layers, f, l, edge_f, edge_l, edge_mask, SL,
+                        mode="xla")
+    rf, rl = f, l
+    for lay in layers:
+        rf, rl = bipartite_round_ref(rf, rl, edge_f, edge_l, edge_mask,
+                                     lay["wf"]["w"], lay["wl"]["w"],
+                                     lay["wf"]["b"], lay["wl"]["b"])
+    np.testing.assert_allclose(np.asarray(gf), np.asarray(rf),
+                               rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(gl), np.asarray(rl),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_dispatch_masked_rowmin_modes_agree():
+    from repro.kernels.dispatch import masked_rowmin as rowmin_dispatch
+    rng = np.random.default_rng(3)
+    a = jnp.asarray((rng.random((60, 40)) < 0.4).astype(np.float32))
+    share = jnp.asarray(rng.uniform(1, 10, 40), jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(rowmin_dispatch(a, share, mode="xla")),
+        np.asarray(rowmin_dispatch(a, share, mode="interpret")), rtol=1e-6)
+
+
 @settings(max_examples=10, deadline=None)
 @given(st.integers(1, 30), st.integers(0, 1000))
 def test_waterfill_single_link_fair_share(n, seed):
