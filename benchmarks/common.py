@@ -1,29 +1,46 @@
 """Shared benchmark infrastructure: scenario pools, one trained m4 artifact
 (cached on disk), error metrics. All simulator access goes through the
-unified `repro.sim` backend API."""
+unified `repro.sim` backend API; training goes through the `repro.train`
+pipeline — dataset shards are content-hash cached under
+results/train_data, and the artifact checkpoint auto-resumes, so a
+half-trained artifact finishes instead of restarting."""
 from __future__ import annotations
 
 import os
-import time
+import shutil
 
 import numpy as np
 
-from repro.core.events import build_event_batch
 from repro.core.model import M4Config
-from repro.core.training import train_m4
 from repro.data.traffic import Scenario
-from repro.runtime import checkpoint as ckpt
 from repro.scenarios import get_suite
 from repro.sim import SimRequest, get_backend
+from repro.train import TrainConfig, load_state, train_suite
 
 # CI-scale m4 (paper: hidden=400, gnn=300, mlp=200 — same structure)
 BENCH_M4 = M4Config(hidden=96, gnn_dim=64, mlp_hidden=64,
                     snap_flows=16, snap_links=48)
-CKPT_DIR = os.path.join(os.path.dirname(__file__), "..", "results", "m4_ckpt")
+_RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
+CKPT_DIR = os.path.join(_RESULTS, "m4_ckpt")
+DATA_DIR = os.path.join(_RESULTS, "train_data")
 
 N_TRAIN_SIMS = 12
 FLOWS_PER_SIM = 150
 EPOCHS = 10
+
+# seed-faithful benchmark regime: constant LR, one update per sim per
+# epoch, fixed order — shared by trained_m4 and the Table-5 ablation so
+# variants differ only in their loss weights
+BENCH_TC = TrainConfig(epochs=EPOCHS, lr=1e-3, schedule="const",
+                       step_mode="per_sim", shuffle=False)
+
+
+def train_suite_spec(n: int = N_TRAIN_SIMS):
+    """The benchmark training corpus: the paper's Table-2 training
+    distribution as a declarative suite (identical to
+    sample_scenario(0..n-1) by construction, see random_spec)."""
+    return get_suite("table2_train_space", n=n,
+                     num_flows=FLOWS_PER_SIM, synthetic=True)
 
 
 def ground_truth(sc: Scenario):
@@ -35,27 +52,26 @@ def ground_truth(sc: Scenario):
 
 
 def trained_m4(force=False, log=print):
-    """Train (or load) the benchmark m4 model. Returns (params, cfg)."""
-    from repro.core.model import init_m4
-    import jax
+    """Train (or load) the benchmark m4 model. Returns (params, cfg).
+
+    The artifact is the `repro.train` checkpoint at results/m4_ckpt: a
+    finished one loads instantly, a partial one resumes, and `force=True`
+    (or an unreadable/legacy-format checkpoint) retrains from scratch —
+    dataset shards stay cached either way."""
+    import dataclasses
     cfg = BENCH_M4
-    proto = init_m4(jax.random.PRNGKey(0), cfg)
-    if not force and ckpt.latest_step(CKPT_DIR) is not None:
-        (params,), _ = ckpt.restore(CKPT_DIR, (proto,))
-        return params, cfg
-    t0 = time.perf_counter()
-    batches = []
-    # the paper's training distribution as a declarative suite: identical
-    # to sample_scenario(0..N-1) by construction (see random_spec)
-    suite = get_suite("table2_train_space", n=N_TRAIN_SIMS,
-                      num_flows=FLOWS_PER_SIM, synthetic=True)
-    for spec in suite:
-        batches.append(build_event_batch(ground_truth(spec.to_scenario()),
-                                         cfg))
-    log(f"[bench] generated {len(batches)} training sims "
-        f"({time.perf_counter()-t0:.0f}s)")
-    state, hist = train_m4(batches, cfg, epochs=EPOCHS, lr=1e-3, log=log)
-    ckpt.save(CKPT_DIR, EPOCHS, (state.params,))
+    if force:
+        shutil.rmtree(CKPT_DIR, ignore_errors=True)
+    try:
+        state, done = load_state(CKPT_DIR, cfg)
+        if state is not None and done >= EPOCHS:
+            return state.params, cfg
+    except Exception as e:     # pre-repro.train checkpoint format
+        log(f"[bench] discarding incompatible checkpoint: {e}")
+        shutil.rmtree(CKPT_DIR, ignore_errors=True)
+    tc = dataclasses.replace(BENCH_TC, ckpt_dir=CKPT_DIR)
+    state, _ = train_suite(train_suite_spec(), cfg, tc, data_root=DATA_DIR,
+                           workers=os.cpu_count() or 1, log=log)
     return state.params, cfg
 
 

@@ -1,5 +1,11 @@
-"""Render EXPERIMENTS.md §Dry-run and §Roofline tables from results/*.json.
+"""Render EXPERIMENTS.md §Dry-run, §Roofline and §Training tables from
+results/*.json.
 Run after the sweeps:  PYTHONPATH=src python -m benchmarks.make_experiments
+
+The §Training table consumes results/train_log.json — the structured
+report `python -m repro.train` (or `repro.train.write_train_log`) emits:
+per-epoch/per-head losses, dataset-store hit rates, train-step compile
+counts and the held-out eval vs the flowSim baseline.
 """
 from __future__ import annotations
 
@@ -61,15 +67,51 @@ def roofline_table():
     return "\n".join(out)
 
 
+def train_table(log_path="results/train_log.json"):
+    """Markdown summary of one training run (`repro.train` log)."""
+    if not os.path.exists(log_path):
+        return f"_no training log at {log_path} — run `python -m repro.train`_"
+    r = json.load(open(log_path))
+    epochs = r["train"]["epochs"]
+    out = [f"**{r['suite']}** — {r['num_sims']} sims, "
+           f"{r['train']['updates']} updates, "
+           f"{r['train']['compiles']} train-step compile(s), "
+           f"dataset {r['dataset']['hits']} hit / "
+           f"{r['dataset']['misses']} built, "
+           f"weights `{r['weights_hash'][:12]}`", ""]
+    out += ["| epoch | loss | sldn | size | queue | lr | wall s |",
+            "|---|---|---|---|---|---|---|"]
+    shown = epochs if len(epochs) <= 8 else epochs[:3] + epochs[-3:]
+    for e in shown:
+        out.append(f"| {e['epoch']} | {e['loss']:.4f} | {e['sldn']:.4f} | "
+                   f"{e['size']:.4f} | {e['queue']:.4f} | {e['lr']:.1e} | "
+                   f"{e['wall_s']:.1f} |")
+    if len(epochs) > 8:
+        out.insert(len(out) - 3, "| ... | | | | | | |")
+    ev = r.get("eval")
+    if ev:
+        base = ev["baseline"]
+        verdict = "beats" if ev["m4_beats_baseline"] else "LOSES TO"
+        out += ["", f"Held-out eval: m4 per-flow slowdown err "
+                    f"**{ev['m4_err_mean']:.3f}** {verdict} {base} "
+                    f"**{ev[base + '_err_mean']:.3f}** "
+                    f"({len(ev['rows'])} scenario(s))."]
+    return "\n".join(out)
+
+
 def main():
-    dr = dryrun_table()
-    rf = roofline_table()
-    src = open("EXPERIMENTS.md").read()
-    src = src.replace("<!--DRYRUN_TABLE-->", dr)
-    src = src.replace("<!--ROOFLINE_TABLE-->", rf)
-    open("EXPERIMENTS.md", "w").write(src)
-    print("EXPERIMENTS.md tables rendered "
-          f"({dr.count(chr(10))} dry-run rows, {rf.count(chr(10))} roofline rows)")
+    tables = {"<!--DRYRUN_TABLE-->": dryrun_table(),
+              "<!--ROOFLINE_TABLE-->": roofline_table(),
+              "<!--TRAIN_TABLE-->": train_table()}
+    if os.path.exists("EXPERIMENTS.md"):
+        src = open("EXPERIMENTS.md").read()
+        for marker, table in tables.items():
+            src = src.replace(marker, table)
+        open("EXPERIMENTS.md", "w").write(src)
+        print("EXPERIMENTS.md tables rendered")
+    else:   # no template: print the rendered tables
+        for marker, table in tables.items():
+            print(f"\n== {marker.strip('<!->')} ==\n{table}")
 
 
 if __name__ == "__main__":

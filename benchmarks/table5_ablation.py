@@ -1,24 +1,29 @@
 """Paper Table 5 / Fig 12: dense-supervision ablation. Trains m4 three ways
-(full, w/o remaining-size loss, w/o queue-length loss) on the same data and
-compares held-out per-flow slowdown error."""
+(full, w/o remaining-size loss, w/o queue-length loss) on the same cached
+corpus and compares held-out per-flow slowdown error.
+
+All three variants fit the exact same `EventBatch` shards (one
+`repro.train.build_dataset` call, shared with `trained_m4`'s corpus via
+the content-hash store) under the same `TrainConfig` — only the per-head
+loss weights differ, which is the whole point of the ablation."""
 from __future__ import annotations
+
+import dataclasses
 
 import numpy as np
 
-from repro.core.events import build_event_batch
-from repro.core.training import train_m4
 from repro.data.traffic import sample_scenario
+from repro.train import build_dataset, fit
 
-from .common import BENCH_M4, EPOCHS, FLOWS_PER_SIM, N_TRAIN_SIMS, \
-    eval_scenario, ground_truth
+from .common import BENCH_M4, BENCH_TC, DATA_DIR, FLOWS_PER_SIM, \
+    N_TRAIN_SIMS, eval_scenario, ground_truth, train_suite_spec
 
 
 def run(log=print, n_train=N_TRAIN_SIMS, n_eval=3):
     cfg = BENCH_M4
-    batches, eval_pairs = [], []
-    for seed in range(n_train):
-        sc = sample_scenario(seed, num_flows=FLOWS_PER_SIM, synthetic=True)
-        batches.append(build_event_batch(ground_truth(sc), cfg))
+    suite = train_suite_spec(n=n_train)   # n > default extends the suite
+    batches, _ = build_dataset(suite, cfg, DATA_DIR, log=log)
+    eval_pairs = []
     for seed in range(1000, 1000 + n_eval):
         sc = sample_scenario(seed, num_flows=FLOWS_PER_SIM, synthetic=False)
         eval_pairs.append((sc, ground_truth(sc)))
@@ -26,10 +31,10 @@ def run(log=print, n_train=N_TRAIN_SIMS, n_eval=3):
     rows = []
     log("variant, err_mean, err_p90, tail_sldn_err")
     for name, kw in [("m4 (full)", {}),
-                     ("w/o size", {"ablate_size": True}),
-                     ("w/o queue", {"ablate_queue": True})]:
-        state, _ = train_m4(batches, cfg, epochs=EPOCHS, lr=1e-3,
-                            log=lambda *a: None, **kw)
+                     ("w/o size", {"w_size": 0.0}),
+                     ("w/o queue", {"w_queue": 0.0})]:
+        tc = dataclasses.replace(BENCH_TC, **kw)
+        state, _ = fit(batches, cfg, tc, log=lambda *a: None)
         means, p90s, tails = [], [], []
         for sc, trace in eval_pairs:
             r = eval_scenario(state.params, cfg, sc, trace)

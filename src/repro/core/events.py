@@ -46,6 +46,34 @@ class EventBatch:
     def num_links(self):
         return len(self.link_feat)
 
+    @property
+    def num_events(self):
+        return len(self.t)
+
+    @property
+    def footprint(self):
+        """(N, L, K) sort key used by the training shape-bucketer
+        (`repro.train.batching.make_buckets`)."""
+        return (self.num_flows, self.num_links, self.num_events)
+
+    # -------------------------------------------------- serialization
+    # The on-disk contract of the training dataset store
+    # (repro.train.data): a flat {field: array} dict, nothing clever, so
+    # shards survive refactors of this class as long as field names and
+    # meanings do.
+    def to_arrays(self) -> dict:
+        """All fields as a plain {name: np.ndarray} dict."""
+        return {k: np.asarray(v) for k, v in self.__dict__.items()}
+
+    @classmethod
+    def from_arrays(cls, arrays: dict) -> "EventBatch":
+        """Inverse of `to_arrays` (extra keys rejected, missing raise)."""
+        names = {f.name for f in cls.__dataclass_fields__.values()}
+        extra = set(arrays) - names
+        if extra:
+            raise KeyError(f"unknown EventBatch fields {sorted(extra)}")
+        return cls(**{n: np.asarray(arrays[n]) for n in names})
+
 
 def build_event_batch(trace: Trace, m4cfg: M4Config,
                       max_events: int | None = None) -> EventBatch:

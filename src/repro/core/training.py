@@ -1,28 +1,31 @@
-"""Dense-supervision training of m4 (§3.3).
+"""Dense-supervision training losses of m4 (§3.3).
 
 Teacher-forced `lax.scan` over the ground-truth event sequence of each
 simulation. Per event: temporal GRU advance -> query remaining size & queue
 length (dense losses) -> GNN spatial update -> query FCT slowdown. Combined
-L1 loss over the three heads, AdamW, gradient clipping.
+L1 loss over the three heads.
+
+This module owns the *math* (`event_scan_losses`, `combined_loss`); the
+production training pipeline — cached dataset store, shape-bucketed
+compilation, checkpoint/resume, schedules, eval — lives in `repro.train`
+(docs/TRAINING.md). `train_m4` survives as a thin convenience wrapper
+over `repro.train.fit` with the seed-faithful per-sim update schedule:
+one optimizer update per sim per epoch, now compiled once per bucket
+*shape* instead of once per sim shape (compiles counted in
+`repro.train.TRACE_COUNTS`, the training mirror of
+`core.simulate.TRACE_COUNTS`).
 """
 from __future__ import annotations
 
-import time
-from dataclasses import dataclass
-from typing import List
-
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from ..optim import adamw_init, adamw_update, clip_by_global_norm
-from .events import EventBatch
-from .model import (M4Config, init_m4, link_static_feat, predict_queue,
-                    predict_size, predict_sldn, spatial_update,
-                    temporal_update)
+from ..optim import adamw_update, clip_by_global_norm
+from .model import (M4Config, predict_queue, predict_size, predict_sldn,
+                    spatial_update, temporal_update)
 
 
-def _as_jnp(b: EventBatch):
+def _as_jnp(b):
     return {k: jnp.asarray(v) for k, v in b.__dict__.items()}
 
 
@@ -135,20 +138,23 @@ def combined_loss(params, cfg: M4Config, b, *, w_size=1.0, w_queue=1.0,
     return total, l
 
 
-@dataclass
-class TrainState:
-    params: dict
-    opt: dict
-    step: int = 0
-
-
 def make_train_step(cfg: M4Config, *, lr=3e-4, ablate_size=False,
                     ablate_queue=False):
+    """One-sim jitted AdamW step (legacy direct API).
+
+    Prefer `repro.train.fit`: jit keys on the sim's tensor shapes, so
+    calling this across a shape-diverse corpus silently retraces per
+    shape — the bucketed pipeline pads shapes away. Traces are counted
+    in `repro.train.TRACE_COUNTS` ("train_step_legacy") so the retrace
+    is at least visible.
+    """
     w_size = 0.0 if ablate_size else 1.0
     w_queue = 0.0 if ablate_queue else 1.0
 
     @jax.jit
     def train_step(params, opt, b):
+        from ..train.loop import TRACE_COUNTS
+        TRACE_COUNTS["train_step_legacy"] += 1
         (tot, parts), grads = jax.value_and_grad(
             combined_loss, has_aux=True)(params, cfg, b, w_size=w_size,
                                          w_queue=w_queue)
@@ -158,22 +164,20 @@ def make_train_step(cfg: M4Config, *, lr=3e-4, ablate_size=False,
     return train_step
 
 
-def train_m4(batches: List[EventBatch], cfg: M4Config, *, epochs=10, lr=3e-4,
-             seed=0, log=print, ablate_size=False, ablate_queue=False):
-    params = init_m4(jax.random.PRNGKey(seed), cfg)
-    opt = adamw_init(params)
-    step_fn = make_train_step(cfg, lr=lr, ablate_size=ablate_size,
-                              ablate_queue=ablate_queue)
-    jbs = [_as_jnp(b) for b in batches]
-    hist = []
-    for ep in range(epochs):
-        t0 = time.perf_counter()
-        tots = []
-        for jb in jbs:
-            params, opt, tot, parts, gn = step_fn(params, opt, jb)
-            tots.append(float(tot))
-        hist.append(np.mean(tots))
-        log(f"[m4-train] epoch {ep}: loss={np.mean(tots):.4f} "
-            f"(sldn={float(parts['sldn']):.4f} size={float(parts['size']):.4f} "
-            f"queue={float(parts['queue']):.4f}) {time.perf_counter()-t0:.1f}s")
-    return TrainState(params=params, opt=opt, step=epochs * len(batches)), hist
+def train_m4(batches, cfg: M4Config, *, epochs=10, lr=3e-4, seed=0,
+             log=print, ablate_size=False, ablate_queue=False,
+             bucket_size=8, ckpt_dir=None):
+    """Convenience wrapper over the `repro.train` pipeline.
+
+    Seed-faithful semantics: constant LR, one AdamW update per sim per
+    epoch (`step_mode="per_sim"`), shuffling off — but compiled once per
+    bucket shape. Returns (TrainState, history) where history is the
+    structured per-head/per-epoch record (`history[i]["loss"]` etc.).
+    """
+    from ..train import TrainConfig, fit
+    tc = TrainConfig(epochs=epochs, lr=lr, schedule="const", seed=seed,
+                     bucket_size=bucket_size, step_mode="per_sim",
+                     shuffle=False, ckpt_dir=ckpt_dir,
+                     w_size=0.0 if ablate_size else 1.0,
+                     w_queue=0.0 if ablate_queue else 1.0)
+    return fit(batches, cfg, tc, log=log)

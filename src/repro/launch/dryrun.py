@@ -110,7 +110,7 @@ def lower_cell(arch: str, shape: str, multi_pod: bool, verbose=True):
     cfg = configs.get_config(arch)
     if not configs.shape_applicable(cfg, shape):
         return {"arch": arch, "shape": shape, "skipped":
-                "long_500k needs sub-quadratic attention (DESIGN.md §4)"}
+                "long_500k needs sub-quadratic attention (DESIGN.md §9)"}
     mesh = make_production_mesh(multi_pod=multi_pod)
     S, B, kind = configs.SHAPES[shape]
     kindname, specs = configs.input_specs(cfg, shape)

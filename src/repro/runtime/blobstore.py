@@ -1,0 +1,80 @@
+"""Content-addressed blob store — the shared machinery behind the sweep
+result cache (`repro.scenarios.ResultCache`) and the training dataset
+store (`repro.train.DatasetStore`).
+
+Layout: `<root>/<key[:2]>/<key>.msgpack.z` — sharded by key prefix so
+huge stores never produce one giant directory. Entries are msgpack
+payloads compressed through `runtime.checkpoint` (zstd, zlib fallback,
+format sniffed on read). Writes are atomic (unique tempfile + rename,
+so concurrent writers of the same key never interleave into one file);
+corrupt or truncated entries read as misses and are removed, to be
+rebuilt by the caller. Subclasses define only the payload codec
+(`_encode`/`_decode`).
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+from typing import Optional
+
+import msgpack
+
+from .checkpoint import _compress, _decompress
+
+
+class BlobStore:
+    """Directory of compressed msgpack blobs addressed by content key."""
+
+    def __init__(self, root: str):
+        self.root = root
+
+    # ------------------------------------------------------- payload codec
+    def _encode(self, obj) -> dict:
+        """Object -> msgpack-able payload dict."""
+        raise NotImplementedError
+
+    def _decode(self, payload: dict):
+        """Inverse of `_encode`."""
+        raise NotImplementedError
+
+    # ----------------------------------------------------------- mechanics
+    def _path(self, key: str) -> str:
+        return os.path.join(self.root, key[:2], key + ".msgpack.z")
+
+    def __contains__(self, key: str) -> bool:
+        return os.path.exists(self._path(key))
+
+    def get(self, key: str) -> Optional[object]:
+        """The stored object, or None on miss/corruption (corrupt entries
+        are deleted so the next build replaces them)."""
+        path = self._path(key)
+        if not os.path.exists(path):
+            return None
+        try:
+            with open(path, "rb") as f:
+                payload = msgpack.unpackb(_decompress(f.read()), raw=False)
+            return self._decode(payload)
+        except Exception:
+            try:
+                os.remove(path)   # a concurrent process may have removed it
+            except OSError:
+                pass
+            return None
+
+    def put(self, key: str, obj) -> str:
+        """Atomically persist one object (unique tmp, rename into place)."""
+        path = self._path(key)
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        raw = msgpack.packb(self._encode(obj), use_bin_type=True)
+        fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path), suffix=".tmp")
+        try:
+            with os.fdopen(fd, "wb") as f:
+                f.write(_compress(raw))
+            os.replace(tmp, path)
+        except BaseException:
+            try:
+                os.remove(tmp)
+            except OSError:
+                pass
+            raise
+        return path

@@ -50,6 +50,24 @@ def _path_str(path) -> str:
     return "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
 
 
+def tree_digest(tree) -> str:
+    """Content hash of a pytree of arrays: sha256 over (path, bytes) of
+    every leaf. Bitwise-equal trees (e.g. a checkpoint-restored model vs
+    the state it saved) digest equal; any parameter change changes it.
+    This is the weights identity the m4 backend fingerprint and
+    `repro.train.TrainState.weights_hash` share, so the sweep result
+    cache can never alias two different trained models — or split one
+    model restored through a checkpoint round-trip into two entries.
+    """
+    h = hashlib.sha256()
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        h.update(_path_str(path).encode())
+        arr = np.asarray(leaf)
+        h.update(str(arr.dtype).encode())
+        h.update(arr.tobytes())
+    return h.hexdigest()
+
+
 def save(ckpt_dir: str, step: int, tree, *, keep_last: int = 3) -> str:
     """Atomically persist a pytree of arrays at `step`."""
     leaves = jax.tree_util.tree_flatten_with_path(tree)[0]

@@ -5,22 +5,19 @@ backend identity) skips the completed scenarios entirely — the unit of
 caching is one (SimRequest, backend fingerprint) pair, keyed by
 `SimRequest.content_hash()` so the key survives process restarts and
 ignores cosmetic spec differences (two specs that materialize the same
-flows share one entry). Storage reuses `repro.runtime.checkpoint`'s
-compression (zstd, zlib fallback) with the same atomic write-then-rename
-discipline, and entries carry the fcts/slowdowns/wall-time triple of a
-`SimResult` (never `raw` — backend-native objects don't round-trip).
+flows share one entry). Storage is `runtime.blobstore.BlobStore`
+(sharded content-addressed directory, zstd/zlib compression, atomic
+write-then-rename, corrupt entries read as misses), and entries carry
+the fcts/slowdowns/wall-time triple of a `SimResult` (never `raw` —
+backend-native objects don't round-trip).
 """
 from __future__ import annotations
 
 import hashlib
-import os
-import tempfile
-from typing import Optional
 
-import msgpack
 import numpy as np
 
-from ..runtime.checkpoint import _compress, _decompress
+from ..runtime.blobstore import BlobStore
 from ..sim import SimRequest, SimResult
 
 
@@ -32,69 +29,24 @@ def result_key(request: SimRequest, backend) -> str:
     ).hexdigest()
 
 
-class ResultCache:
-    """Directory of compressed `SimResult`s addressed by content key.
+class ResultCache(BlobStore):
+    """Blob store of compressed `SimResult`s addressed by content key."""
 
-    Layout: `<root>/<key[:2]>/<key>.msgpack.z` (sharded by prefix so huge
-    sweeps don't produce one giant directory). Corrupt or truncated
-    entries read as misses and are removed.
-    """
-
-    def __init__(self, root: str):
-        self.root = root
-
-    def _path(self, key: str) -> str:
-        return os.path.join(self.root, key[:2], key + ".msgpack.z")
-
-    def __contains__(self, key: str) -> bool:
-        return os.path.exists(self._path(key))
-
-    def get(self, key: str) -> Optional[SimResult]:
-        """The cached result, or None on miss/corruption."""
-        path = self._path(key)
-        if not os.path.exists(path):
-            return None
-        try:
-            with open(path, "rb") as f:
-                payload = msgpack.unpackb(_decompress(f.read()), raw=False)
-            fcts = np.frombuffer(payload["fcts"],
-                                 np.dtype(payload["dtype"])).copy()
-            sldn = np.frombuffer(payload["slowdowns"],
-                                 np.dtype(payload["dtype"])).copy()
-            return SimResult(fcts=fcts, slowdowns=sldn,
-                             wall_time=payload["wall_time"],
-                             backend=payload["backend"])
-        except Exception:
-            try:
-                os.remove(path)   # a concurrent sweep may have removed it
-            except OSError:
-                pass
-            return None
-
-    def put(self, key: str, result: SimResult) -> str:
-        """Atomically persist one result (write tmp, rename into place)."""
-        path = self._path(key)
-        os.makedirs(os.path.dirname(path), exist_ok=True)
+    def _encode(self, result: SimResult) -> dict:
         dt = np.float64
-        payload = {
+        return {
             "dtype": np.dtype(dt).str,
             "fcts": np.ascontiguousarray(result.fcts, dt).tobytes(),
             "slowdowns": np.ascontiguousarray(result.slowdowns, dt).tobytes(),
             "wall_time": float(result.wall_time),
             "backend": result.backend,
         }
-        # unique temp name: concurrent sweeps writing the same key must
-        # not interleave into one file (each rename stays atomic)
-        fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path),
-                                   suffix=".tmp")
-        try:
-            with os.fdopen(fd, "wb") as f:
-                f.write(_compress(msgpack.packb(payload, use_bin_type=True)))
-            os.replace(tmp, path)
-        except BaseException:
-            try:
-                os.remove(tmp)
-            except OSError:
-                pass
-            raise
-        return path
+
+    def _decode(self, payload: dict) -> SimResult:
+        fcts = np.frombuffer(payload["fcts"],
+                             np.dtype(payload["dtype"])).copy()
+        sldn = np.frombuffer(payload["slowdowns"],
+                             np.dtype(payload["dtype"])).copy()
+        return SimResult(fcts=fcts, slowdowns=sldn,
+                         wall_time=payload["wall_time"],
+                         backend=payload["backend"])

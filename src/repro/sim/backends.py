@@ -231,14 +231,15 @@ class M4Backend(Backend):
         the exact parameters (and model shape) that produced them, and for
         the resolved kernel mode (Pallas vs jnp execution paths are not
         bitwise identical). The mode is pinned at backend construction
-        (`canonicalize_cfg`)."""
+        (`canonicalize_cfg`). The weights hash is the same `tree_digest`
+        the training pipeline reports (`TrainState.weights_hash`), so a
+        checkpoint-resumed model and the uninterrupted run it bitwise
+        reproduces share one sweep-cache identity, while any retrained
+        weights get their own."""
         if self._fingerprint is None:
-            import jax
-            h = hashlib.sha256(repr(self.cfg).encode())
-            leaves = jax.tree_util.tree_flatten_with_path(self.params)[0]
-            for path, leaf in leaves:
-                h.update(str(path).encode())
-                h.update(np.asarray(leaf).tobytes())
+            from ..runtime.checkpoint import tree_digest
+            h = hashlib.sha256(
+                (repr(self.cfg) + tree_digest(self.params)).encode())
             self._fingerprint = \
                 f"m4-{h.hexdigest()[:16]}-k{self.cfg.kernel_mode}"
         return self._fingerprint

@@ -1,0 +1,35 @@
+"""repro.train — batched, sharded, resumable training of m4.
+
+The production counterpart of the inference stack PRs 1-3 built: a
+content-hash-cached ground-truth dataset store fed by `repro.scenarios`
+suites (`build_dataset`), shape-bucketed compilation of the teacher-forced
+event scan (`make_buckets` + one jitted step per bucket shape, compiles
+counted in `TRACE_COUNTS`), and a checkpoint/auto-resume training loop
+with LR schedules, structured history and registry-based held-out eval
+(`fit`, `evaluate_m4`, `train_suite`):
+
+    from repro.scenarios import get_suite
+    from repro.train import TrainConfig, build_dataset, fit
+
+    suite = get_suite("smoke16", num_flows=12)
+    batches, _ = build_dataset(suite, cfg, "results/train_data",
+                               max_events=48)
+    state, history = fit(batches, cfg, TrainConfig(epochs=2))
+
+CLI: `python -m repro.train --suite smoke16` (see --help).
+See docs/TRAINING.md for the dataset store layout, bucketing and resume
+semantics, and docs/DESIGN.md §4 for the design.
+"""
+from .batching import Bucket, make_buckets, pad_event_batch, stack_bucket
+from .data import (DatasetReport, DatasetStore, build_dataset, dataset_key,
+                   dataset_key_from_shards, shard_key)
+from .loop import (TRACE_COUNTS, TrainConfig, TrainState, evaluate_m4, fit,
+                   init_state, load_state, train_suite, write_train_log)
+
+__all__ = [
+    "Bucket", "make_buckets", "pad_event_batch", "stack_bucket",
+    "DatasetStore", "DatasetReport", "build_dataset", "dataset_key",
+    "dataset_key_from_shards", "shard_key",
+    "TrainConfig", "TrainState", "TRACE_COUNTS", "fit", "init_state",
+    "load_state", "evaluate_m4", "train_suite", "write_train_log",
+]

@@ -1,0 +1,372 @@
+"""repro.train: the dataset store (content-hash shards, worker fan-out,
+100%-hit rebuilds), shape-bucketed padding (losses preserved bitwise-ish
+vs unpadded), the compile-count acceptance guarantee (16 shape-diverse
+sims -> <= ceil(16/bucket) train-step compiles), TrainState
+checkpoint/resume (bitwise), gradient coverage per head, the weights-hash
+fingerprint threading, and the CLI end-to-end with a mid-run kill."""
+import dataclasses
+import json
+import os
+import shutil
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.model import M4Config, init_m4
+from repro.core.training import _as_jnp, event_scan_losses
+from repro.scenarios import get_suite
+from repro.train import (TRACE_COUNTS, TrainConfig, build_dataset,
+                         dataset_key, fit, init_state, load_state,
+                         make_buckets, shard_key, stack_bucket)
+
+TINY = M4Config(hidden=16, gnn_dim=12, mlp_hidden=8, gnn_layers=2,
+                snap_flows=8, snap_links=24)
+MAX_EVENTS = 32
+
+
+@pytest.fixture(scope="module")
+def corpus16(tmp_path_factory):
+    """The acceptance corpus: all 16 shape-diverse smoke16 scenarios,
+    built once through the store (shared by the compile-count and
+    training tests)."""
+    root = str(tmp_path_factory.mktemp("store16"))
+    suite = get_suite("smoke16", num_flows=12)
+    batches, report = build_dataset(suite, TINY, root,
+                                    max_events=MAX_EVENTS)
+    return suite, batches, report, root
+
+
+@pytest.fixture(scope="module")
+def corpus4(corpus16):
+    suite, batches, _, root = corpus16
+    return list(suite)[:4], batches[:4], root
+
+
+# ------------------------------------------------------------ dataset store
+def test_dataset_rebuild_is_all_hits(corpus16):
+    suite, batches, report, root = corpus16
+    assert report.misses > 0 and report.hits + report.misses == 16
+    again, report2 = build_dataset(suite, TINY, root, max_events=MAX_EVENTS)
+    assert (report2.hits, report2.misses) == (16, 0), vars(report2)
+    assert report2.hit_rate == 1.0
+    for a, b in zip(batches, again):
+        for k, v in a.to_arrays().items():
+            np.testing.assert_array_equal(v, b.to_arrays()[k], err_msg=k)
+
+
+def test_shard_key_tracks_content(corpus4):
+    specs, _, _ = corpus4
+    s = specs[0]
+    k0 = shard_key(s, TINY, max_events=MAX_EVENTS)
+    assert k0 == shard_key(s, TINY, max_events=MAX_EVENTS)  # stable
+    assert k0 != shard_key(s, TINY, max_events=MAX_EVENTS + 1)
+    assert k0 != shard_key(s, dataclasses.replace(TINY, snap_flows=16),
+                           max_events=MAX_EVENTS)
+    assert k0 != shard_key(dataclasses.replace(s, seed=s.seed + 1), TINY,
+                           max_events=MAX_EVENTS)
+    # gnn width is a model knob, not an event-tensor layout knob
+    assert k0 == shard_key(s, dataclasses.replace(TINY, gnn_dim=32),
+                           max_events=MAX_EVENTS)
+    # aggregate corpus key: order-independent, content-sensitive
+    assert dataset_key(specs, TINY, max_events=MAX_EVENTS) == \
+        dataset_key(specs[::-1], TINY, max_events=MAX_EVENTS)
+    assert dataset_key(specs, TINY, max_events=MAX_EVENTS) != \
+        dataset_key(specs[:-1], TINY, max_events=MAX_EVENTS)
+
+
+def test_report_corpus_key_matches_dataset_key(corpus16):
+    """`DatasetReport.corpus_key` (free — derived from the shard keys the
+    build already computed) equals a from-scratch `dataset_key`."""
+    suite, _, report, _ = corpus16
+    assert report.corpus_key == dataset_key(list(suite), TINY,
+                                            max_events=MAX_EVENTS)
+
+
+def test_worker_pool_matches_inline(corpus4, tmp_path):
+    """Process-pool shards are bitwise identical to inline ones (the
+    determinism the store's content keys promise)."""
+    specs, inline_batches, _ = corpus4
+    pooled, report = build_dataset(specs[:2], TINY, str(tmp_path / "w"),
+                                   max_events=MAX_EVENTS, workers=2)
+    assert report.misses == 2
+    for a, b in zip(inline_batches[:2], pooled):
+        for k, v in a.to_arrays().items():
+            np.testing.assert_array_equal(v, b.to_arrays()[k], err_msg=k)
+
+
+def test_store_corruption_is_a_miss(corpus4, tmp_path):
+    from repro.train import DatasetStore
+    specs, _, _ = corpus4
+    root = str(tmp_path / "c")
+    build_dataset(specs[:1], TINY, root, max_events=MAX_EVENTS)
+    store = DatasetStore(root)
+    key = shard_key(specs[0], TINY, max_events=MAX_EVENTS)
+    path = store._path(key)
+    with open(path, "wb") as f:
+        f.write(b"garbage")
+    assert store.get(key) is None
+    assert not os.path.exists(path)   # removed, next build rebuilds
+
+
+# ---------------------------------------------------------------- batching
+def test_padding_preserves_per_sim_losses(corpus4):
+    """vmapped losses on the padded+stacked bucket match each sim's
+    unpadded losses — padded flows/links/events are inert."""
+    _, batches, _ = corpus4
+    assert len({b.footprint for b in batches}) > 1, "want diverse shapes"
+    params = init_m4(jax.random.PRNGKey(0), TINY)
+    stacked = stack_bucket(batches)
+    lv = jax.vmap(lambda b: event_scan_losses(params, TINY, b))(stacked)
+    for i, b in enumerate(batches):
+        li = event_scan_losses(params, TINY, _as_jnp(b))
+        for head in li:
+            np.testing.assert_allclose(
+                float(lv[head][i]), float(li[head]), rtol=2e-5,
+                err_msg=f"sim {i} head {head}")
+
+
+def test_bucketing_is_deterministic_and_bounded(corpus16):
+    _, batches, _, _ = corpus16
+    buckets = make_buckets(batches, bucket_size=8)
+    assert len(buckets) == 2 and all(b.size == 8 for b in buckets)
+    # footprint-sorted: every sim in bucket 0 is <= every sim in bucket 1
+    assert max(batches[i].footprint for i in buckets[0].indices) <= \
+        min(batches[i].footprint for i in buckets[1].indices)
+    again = make_buckets(batches, bucket_size=8)
+    assert [b.indices for b in buckets] == [b.indices for b in again]
+    with pytest.raises(ValueError):
+        make_buckets(batches, bucket_size=0)
+
+
+# --------------------------------------------------- compile-count guarantee
+def test_16sim_corpus_trains_in_two_compiles(corpus16):
+    """The acceptance criterion: 16 shape-diverse sims, bucket_size=8 ->
+    at most ceil(16/8)=2 train-step compiles (the seed retraced once per
+    sim shape)."""
+    _, batches, _, _ = corpus16
+    c0 = sum(TRACE_COUNTS.values())
+    state, hist = fit(batches, TINY, TrainConfig(epochs=2, bucket_size=8),
+                      log=lambda *a: None)
+    compiles = sum(TRACE_COUNTS.values()) - c0
+    assert compiles <= 2, f"{compiles} compiles for 16 sims / bucket 8"
+    assert state.step == 2 * 16     # per_sim: one update per sim per epoch
+    assert len(hist) == 2
+
+
+def test_fit_loss_strictly_decreases(corpus4):
+    _, batches, _ = corpus4
+    _, hist = fit(batches, TINY,
+                  TrainConfig(epochs=3, lr=1e-3, schedule="const"),
+                  log=lambda *a: None)
+    losses = [h["loss"] for h in hist]
+    assert losses[1] < losses[0] and losses[2] < losses[1], losses
+    assert {"sldn", "size", "queue", "lr", "grad_norm", "wall_s"} \
+        <= set(hist[0])
+
+
+def test_batch_mode_single_update_per_bucket(corpus4):
+    _, batches, _ = corpus4
+    state, hist = fit(batches, TINY,
+                      TrainConfig(epochs=2, step_mode="batch"),
+                      log=lambda *a: None)
+    assert state.step == 2          # one averaged update per bucket-epoch
+    assert hist[-1]["loss"] < hist[0]["loss"]
+
+
+# --------------------------------------------------------- gradient coverage
+def test_every_param_leaf_gets_gradient(corpus4):
+    """Dense supervision reaches every parameter: no dead heads, no
+    unused GRUs/GNN layers — and ablating a head's loss weight zeroes
+    exactly that head (what this test exists to catch)."""
+    from repro.train.loop import _sim_loss
+    _, batches, _ = corpus4
+    params = init_m4(jax.random.PRNGKey(0), TINY)
+    b = _as_jnp(batches[0])
+    g = jax.grad(lambda p: _sim_loss(p, TINY, TrainConfig(), b)[0])(params)
+    dead = ["/".join(str(getattr(k, "key", k)) for k in path)
+            for path, leaf in jax.tree_util.tree_flatten_with_path(g)[0]
+            if float(np.abs(np.asarray(leaf)).max()) == 0.0]
+    assert not dead, f"param leaves with zero gradient: {dead}"
+    # ablated size head -> its MLP gets exactly zero gradient
+    g0 = jax.grad(lambda p: _sim_loss(
+        p, TINY, TrainConfig(w_size=0.0), b)[0])(params)
+    assert all(float(np.abs(np.asarray(l)).max()) == 0.0
+               for l in jax.tree.leaves(g0["mlp_size"]))
+    assert any(float(np.abs(np.asarray(l)).max()) > 0.0
+               for l in jax.tree.leaves(g0["mlp_queue"]))
+
+
+# --------------------------------------------------------- state persistence
+def test_trainstate_checkpoint_roundtrip(corpus4, tmp_path):
+    """params + AdamW moments + step + RNG all survive the round-trip
+    bitwise."""
+    _, batches, _ = corpus4
+    ck = str(tmp_path / "ck")
+    tc = TrainConfig(epochs=2, ckpt_dir=ck)
+    state, _ = fit(batches, TINY, tc, log=lambda *a: None)
+    restored, done = load_state(ck, TINY)
+    assert done == 2 and restored.step == state.step
+    for a, b in zip(jax.tree.leaves(state.tree()),
+                    jax.tree.leaves(restored.tree())):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert restored.weights_hash() == state.weights_hash()
+    assert load_state(str(tmp_path / "nope"), TINY) == (None, None)
+    # a truncated history.json (kill mid-write) costs the loss log only,
+    # never the resume — the checkpoint is the source of truth
+    with open(os.path.join(ck, "history.json"), "w") as f:
+        f.write('[{"epoch": 0')
+    again, hist = fit(batches, TINY, tc, log=lambda *a: None)
+    assert again.weights_hash() == state.weights_hash()
+    assert hist == []
+
+
+def test_resume_reproduces_uninterrupted_run_bitwise(corpus4, tmp_path):
+    """Training killed after an epoch-2 checkpoint and re-invoked with
+    the same config finishes with bitwise-identical parameters (and
+    identical loss history) to an uninterrupted run."""
+    _, batches, _ = corpus4
+    full_dir, kill_dir = str(tmp_path / "full"), str(tmp_path / "kill")
+    tc = TrainConfig(epochs=4, lr=1e-3, ckpt_dir=full_dir)
+    full_state, full_hist = fit(batches, TINY, tc, log=lambda *a: None)
+    # simulate the kill: keep only what a death after epoch 2 leaves
+    shutil.copytree(full_dir, kill_dir)
+    for d in os.listdir(kill_dir):
+        if d.startswith("step_") and int(d[5:]) > 2:
+            shutil.rmtree(os.path.join(kill_dir, d))
+    res_state, res_hist = fit(batches, TINY,
+                              dataclasses.replace(tc, ckpt_dir=kill_dir),
+                              log=lambda *a: None)
+    for a, b in zip(jax.tree.leaves(full_state.params),
+                    jax.tree.leaves(res_state.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert res_state.weights_hash() == full_state.weights_hash()
+    assert [h["loss"] for h in res_hist] == [h["loss"] for h in full_hist]
+    # a finished run restores instantly and changes nothing
+    again, again_hist = fit(batches, TINY, tc, log=lambda *a: None)
+    assert again.weights_hash() == full_state.weights_hash()
+    assert len(again_hist) == 4
+
+
+def test_weights_hash_threads_into_backend_fingerprint(corpus4, tmp_path):
+    """The sweep-cache identity of an m4 backend is the trained-weights
+    digest: fresh-vs-trained params never alias, a checkpoint-restored
+    model aliases its source exactly."""
+    from repro.sim import get_backend
+    _, batches, _ = corpus4
+    ck = str(tmp_path / "ck")
+    state, _ = fit(batches, TINY, TrainConfig(epochs=1, ckpt_dir=ck),
+                   log=lambda *a: None)
+    restored, _ = load_state(ck, TINY)
+    fresh = init_state(TINY, seed=0)
+    fp = lambda p: get_backend("m4", params=p, cfg=TINY).fingerprint()
+    assert fp(state.params) == fp(restored.params)
+    assert fp(state.params) != fp(fresh.params)
+    assert state.weights_hash() == restored.weights_hash()
+    assert state.weights_hash() != fresh.weights_hash()
+
+
+# ------------------------------------------------------------- train log
+def test_make_experiments_renders_train_log(tmp_path):
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+    from benchmarks.make_experiments import train_table
+    log = {"suite": "smoke16", "num_sims": 4,
+           "dataset": {"hits": 4, "misses": 0},
+           "train": {"epochs": [{"epoch": 0, "loss": 1.0, "sldn": 0.2,
+                                 "size": 0.4, "queue": 0.4, "lr": 1e-3,
+                                 "wall_s": 1.0}],
+                     "compiles": 1, "updates": 4},
+           "weights_hash": "ab" * 32,
+           "eval": {"baseline": "flowsim", "m4_err_mean": 0.1,
+                    "flowsim_err_mean": 0.5, "m4_beats_baseline": True,
+                    "rows": [{}]}}
+    p = tmp_path / "train_log.json"
+    p.write_text(json.dumps(log))
+    md = train_table(str(p))
+    assert "smoke16" in md and "1 train-step compile" in md
+    assert "beats flowsim" in md
+    assert "_no training log" in train_table(str(tmp_path / "missing.json"))
+
+
+# ------------------------------------------------- multi-device (subprocess)
+def test_sharded_batch_step_matches_vmap_subprocess():
+    """With 2 forced host devices, batch mode takes the pmap path: one
+    sharded compile, and the psum-weighted gradient math reproduces the
+    plain vmap loss on an uneven (3-sim, weight-padded) bucket."""
+    code = """
+import numpy as np, jax, tempfile, os
+assert jax.local_device_count() == 2, jax.devices()
+from repro.core.model import M4Config, init_m4
+from repro.core.training import event_scan_losses
+from repro.scenarios import get_suite
+from repro.train import TrainConfig, build_dataset, fit, TRACE_COUNTS
+from repro.train.batching import stack_bucket
+cfg = M4Config(hidden=16, gnn_dim=12, mlp_hidden=8, gnn_layers=2,
+               snap_flows=8, snap_links=24)
+suite = get_suite("smoke16", num_flows=12).limit(3)
+batches, _ = build_dataset(suite, cfg, tempfile.mkdtemp(), max_events=32)
+tc = TrainConfig(epochs=1, step_mode="batch", shuffle=False)
+state, hist = fit(batches, cfg, tc, log=lambda *a: None)
+assert TRACE_COUNTS["train_step_sharded"] == 1, dict(TRACE_COUNTS)
+params0 = init_m4(jax.random.PRNGKey(tc.seed), cfg)
+per = jax.vmap(lambda b: event_scan_losses(params0, cfg, b))(
+    stack_bucket(batches))
+ref = float(np.mean(np.asarray(per["sldn"] + per["size"] + per["queue"])))
+np.testing.assert_allclose(hist[0]["loss"], ref, rtol=1e-4)
+print("train-sharded-ok")
+"""
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=2",
+               JAX_PLATFORMS="cpu",
+               PYTHONPATH=os.path.join(os.path.dirname(__file__), "..",
+                                       "src"))
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=300)
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "train-sharded-ok" in out.stdout
+
+
+# ------------------------------------------------------------------- CLI
+def test_cli_kill_resume_end_to_end(tmp_path):
+    """`python -m repro.train`: killed after the epoch-1 checkpoint
+    (hard os._exit, nothing cleaned up), re-invoking the identical
+    command resumes and reproduces the uninterrupted run's weights hash;
+    the dataset build is 100% cache hits on every rerun; the eval report
+    has m4 beating the flowSim baseline."""
+    work = str(tmp_path / "w")
+    args = [sys.executable, "-m", "repro.train", "--suite", "smoke16",
+            "--limit", "4", "--num-flows", "12", "--max-events", "32",
+            "--epochs", "3", "--hidden", "16", "--gnn-dim", "12",
+            "--mlp-hidden", "8", "--snap-flows", "8", "--snap-links", "24",
+            "--eval-suite", "table3_empirical", "--eval-n", "2",
+            "--eval-flows", "30", "--workdir", work]
+    env = dict(os.environ, JAX_PLATFORMS="cpu",
+               PYTHONPATH=os.path.join(os.path.dirname(__file__), "..",
+                                       "src"))
+
+    def run(extra_env=None, ckpt=None):
+        e = dict(env, **(extra_env or {}))
+        cmd = args + (["--ckpt-dir", ckpt] if ckpt else [])
+        return subprocess.run(cmd, env=e, capture_output=True, text=True,
+                              timeout=540)
+
+    killed = run(extra_env={"REPRO_TRAIN_ABORT_AFTER_EPOCH": "1"})
+    assert killed.returncode == 17, killed.stdout + killed.stderr
+    resumed = run()
+    assert resumed.returncode == 0, resumed.stdout + resumed.stderr
+    assert "resumed from" in resumed.stdout
+    log = json.load(open(os.path.join(work, "train_log.json")))
+    assert log["dataset"] == {**log["dataset"], "hits": 4, "misses": 0}
+    assert log["eval"]["m4_beats_baseline"] is True
+    assert len(log["train"]["epochs"]) == 3
+
+    # uninterrupted reference: same data store, fresh checkpoint dir
+    fresh = run(ckpt=str(tmp_path / "ck2"))
+    assert fresh.returncode == 0, fresh.stdout + fresh.stderr
+    log2 = json.load(open(os.path.join(work, "train_log.json")))
+    assert log2["weights_hash"] == log["weights_hash"], \
+        "resumed run diverged from uninterrupted run"
+    assert [e["loss"] for e in log2["train"]["epochs"]] == \
+        [e["loss"] for e in log["train"]["epochs"]]
