@@ -1,0 +1,96 @@
+"""repro.analysis — JAX-aware static analysis for this codebase.
+
+Six AST checkers, each encoding a bug class the repo has already hit
+(see docs/ANALYSIS.md for the catalog and DESIGN.md §10 for the design):
+tracer-leak, retrace-hazard, host-sync, dtype-drift, donation-misuse,
+fingerprint-coverage. Run it:
+
+    PYTHONPATH=src python -m repro.analysis --check     # CI gate
+    python tools/lint_jax.py --json report.json         # same, via tools/
+
+`--check` exits nonzero on any finding not in the committed baseline
+(tools/analysis_baseline.json) and on baseline entries without a
+justification; stale entries (code fixed, entry left behind) are reported
+but don't fail. Inline `# lint-jax: disable=<checker>` on (or directly
+above) a line silences it at the source.
+
+The sibling runtime layer is `repro.runtime.guards`: `no_retrace(...)`
+asserts TRACE_COUNTS compile budgets around sweep/train stages, and
+`REPRO_CHECK_FINITE=1` turns on NaN/Inf checks at stage boundaries —
+static analysis catches the structure, the guards catch the numbers.
+"""
+from __future__ import annotations
+
+import os
+from typing import Dict, Iterable, List, Optional, Sequence
+
+from .baseline import (load_baseline, partition, save_baseline, unjustified)
+from .checkers import (Checker, ModuleSource, default_checkers)
+from .findings import Finding, assign_occurrences
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.dirname(
+    os.path.dirname(os.path.abspath(__file__)))))
+DEFAULT_TARGETS = ("src/repro",)
+DEFAULT_BASELINE = os.path.join("tools", "analysis_baseline.json")
+
+
+def analyze_source(text: str, path: str = "<string>",
+                   checkers: Optional[Sequence[Checker]] = None,
+                   ) -> List[Finding]:
+    """Run the module-scope checkers over one source string (the unit the
+    tests and doc snippets use). Project-scope checkers need the whole
+    file set — see `analyze_paths`."""
+    mod = ModuleSource.parse(text, path)
+    out: List[Finding] = []
+    for checker in checkers or default_checkers():
+        if checker.scope == "module":
+            out.extend(checker.check(mod))
+    return assign_occurrences(out)
+
+
+def iter_python_files(targets: Iterable[str], root: str = None,
+                      ) -> List[str]:
+    """Repo-relative paths of every .py under the target files/dirs."""
+    root = root or REPO_ROOT
+    out = []
+    for target in targets:
+        full = target if os.path.isabs(target) else os.path.join(root, target)
+        if os.path.isfile(full):
+            out.append(os.path.relpath(full, root))
+            continue
+        for dirpath, dirnames, filenames in os.walk(full):
+            dirnames[:] = [d for d in sorted(dirnames)
+                           if d not in ("__pycache__",)]
+            for name in sorted(filenames):
+                if name.endswith(".py"):
+                    out.append(os.path.relpath(
+                        os.path.join(dirpath, name), root))
+    return sorted(set(p.replace(os.sep, "/") for p in out))
+
+
+def analyze_paths(targets: Sequence[str] = DEFAULT_TARGETS,
+                  root: str = None,
+                  checkers: Optional[Sequence[Checker]] = None,
+                  ) -> List[Finding]:
+    """Run every checker (module- and project-scope) over the target
+    files/dirs; paths in findings are repo-relative."""
+    root = root or REPO_ROOT
+    checkers = list(checkers or default_checkers())
+    mods: List[ModuleSource] = []
+    findings: List[Finding] = []
+    for rel in iter_python_files(targets, root):
+        with open(os.path.join(root, rel)) as f:
+            text = f.read()
+        try:
+            mods.append(ModuleSource.parse(text, rel))
+        except SyntaxError as e:
+            findings.append(Finding(checker="parse-error", path=rel,
+                                    line=e.lineno or 0,
+                                    message=f"does not parse: {e.msg}"))
+    for checker in checkers:
+        if checker.scope == "module":
+            for mod in mods:
+                findings.extend(checker.check(mod))
+        else:
+            findings.extend(checker.check_project(mods))
+    return assign_occurrences(findings)

@@ -1,0 +1,750 @@
+"""The JAX-aware AST checkers (DESIGN.md §10, docs/ANALYSIS.md catalog).
+
+Each checker encodes a bug class this repo has already hit or is
+structurally exposed to:
+
+    tracer-leak           module-level jnp array construction (the PR 3
+                          kernels/waterfill/ref.py bug: a module imported
+                          lazily from inside a jitted function captured a
+                          tracer into a module constant)
+    retrace-hazard        fresh `jax.jit` objects created inside loops
+                          (new cache per iteration) and Python `if`/`while`
+                          branching on traced parameters inside jit bodies
+    host-sync             `.item()/.tolist()/float()/int()/np.*` device
+                          pulls inside jit/scan/vmap bodies anywhere, and
+                          in the hot-path packages even outside them
+    dtype-drift           jnp/np array constructors without an explicit
+                          dtype in arena-building code (padded arenas are
+                          stacked and vmapped — a float64 default that
+                          silently downcasts at `jnp.asarray` is a latent
+                          numerics change)
+    donation-misuse       reading a buffer after passing it through a
+                          `donate_argnums` position without rebinding it
+    fingerprint-coverage  compile-/output-relevant dataclass fields that no
+                          fingerprint/content-hash implementation reflects
+                          (stale-cache hazard for the sweep/dataset caches)
+
+Checkers are deliberately syntactic: no imports of the scanned code, no
+jax at analysis time. False positives are expected and cheap — they go in
+the committed baseline (tools/analysis_baseline.json) with a one-line
+justification, or behind an inline `# lint-jax: disable=<checker>` pragma.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from dataclasses import dataclass, field
+from typing import Dict, Iterator, List, Optional, Sequence, Set, Tuple
+
+from .findings import Finding
+
+# jnp constructors that materialize a fresh array (tracer-leak at module
+# scope) — conversions like asarray are included: converting at import
+# time pins a buffer just the same.
+ARRAY_CONSTRUCTORS = {
+    "array", "asarray", "zeros", "ones", "full", "empty", "arange",
+    "linspace", "logspace", "eye", "identity", "tri", "zeros_like",
+    "ones_like", "full_like", "float32", "float64", "float16", "bfloat16",
+    "int32", "int64", "int8", "uint8", "bool_",
+}
+
+# constructors whose default dtype is a silent platform/x64 policy choice
+# (dtype-drift checker). `array`/`asarray` are excluded: they preserve
+# their input's dtype, which is usually the intent.
+DTYPE_REQUIRED = {"zeros", "ones", "full", "empty", "arange"}
+# index of the positional arg that may carry the dtype, per constructor
+DTYPE_POSITION = {"zeros": 1, "ones": 1, "empty": 1, "full": 2, "arange": 3}
+
+TRACED_WRAPPERS = {"scan", "while_loop", "fori_loop", "cond", "vmap",
+                   "pmap", "jit", "remat", "checkpoint", "switch"}
+
+HOST_SYNC_METHODS = {"item", "tolist", "block_until_ready"}
+
+PRAGMA_RE = re.compile(r"lint-jax:\s*disable=([\w,\-]+)")
+
+
+@dataclass
+class ModuleSource:
+    """One parsed file plus the import-alias maps the checkers query."""
+    path: str                      # repo-relative, forward slashes
+    text: str
+    tree: ast.Module
+    lines: List[str] = field(default_factory=list)
+    jnp_aliases: Set[str] = field(default_factory=set)   # -> jax.numpy
+    jax_aliases: Set[str] = field(default_factory=set)   # -> jax
+    np_aliases: Set[str] = field(default_factory=set)    # -> numpy
+    lax_aliases: Set[str] = field(default_factory=set)   # -> jax.lax
+    jit_names: Set[str] = field(default_factory=set)     # -> jax.jit/pmap
+
+    @classmethod
+    def parse(cls, text: str, path: str) -> "ModuleSource":
+        mod = cls(path=path.replace("\\", "/"), text=text,
+                  tree=ast.parse(text), lines=text.splitlines())
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    name = a.asname or a.name.split(".")[0]
+                    if a.name == "jax.numpy":
+                        mod.jnp_aliases.add(a.asname or "jax.numpy")
+                    elif a.name == "jax.lax":
+                        mod.lax_aliases.add(a.asname or "jax.lax")
+                    elif a.name == "jax":
+                        mod.jax_aliases.add(name)
+                    elif a.name == "numpy":
+                        mod.np_aliases.add(name)
+            elif isinstance(node, ast.ImportFrom):
+                if node.module == "jax":
+                    for a in node.names:
+                        tgt = a.asname or a.name
+                        if a.name == "numpy":
+                            mod.jnp_aliases.add(tgt)
+                        elif a.name == "lax":
+                            mod.lax_aliases.add(tgt)
+                        elif a.name in ("jit", "pmap"):
+                            mod.jit_names.add(tgt)
+                elif node.module == "numpy":
+                    for a in node.names:
+                        if a.name == "numpy":
+                            mod.np_aliases.add(a.asname or a.name)
+        return mod
+
+    def src(self, node: ast.AST) -> str:
+        line = getattr(node, "lineno", 0)
+        return self.lines[line - 1].strip() if 0 < line <= len(self.lines) \
+            else ""
+
+    def suppressed(self, node: ast.AST, checker: str) -> bool:
+        """`# lint-jax: disable=<checker>[,<checker>]` on the offending
+        line or the line directly above silences that line."""
+        line = getattr(node, "lineno", 0)
+        for ln in (line, line - 1):
+            if 0 < ln <= len(self.lines):
+                m = PRAGMA_RE.search(self.lines[ln - 1])
+                if m and (checker in m.group(1).split(",")
+                          or m.group(1) == "all"):
+                    return True
+        return False
+
+    # ---------------------------------------------------- call classifiers
+    def attr_chain(self, node: ast.AST) -> List[str]:
+        """`jax.numpy.zeros` -> ["jax", "numpy", "zeros"]; [] if not a
+        plain name/attribute chain."""
+        parts: List[str] = []
+        while isinstance(node, ast.Attribute):
+            parts.append(node.attr)
+            node = node.value
+        if isinstance(node, ast.Name):
+            parts.append(node.id)
+            return parts[::-1]
+        return []
+
+    def is_jnp_call(self, call: ast.Call) -> Optional[str]:
+        """Constructor name if `call` builds a jax array (jnp.*,
+        jax.numpy.*, jax.random.*), else None."""
+        chain = self.attr_chain(call.func)
+        if len(chain) < 2:
+            return None
+        root, rest = chain[0], chain[1:]
+        if root in self.jnp_aliases and rest[-1] in ARRAY_CONSTRUCTORS:
+            return rest[-1]
+        if root in self.jax_aliases and len(rest) >= 2:
+            if rest[0] == "numpy" and rest[-1] in ARRAY_CONSTRUCTORS:
+                return rest[-1]
+            if rest[0] == "random":          # PRNGKey etc. at import time
+                return ".".join(rest)
+        return None
+
+    def is_jit_call(self, call: ast.Call) -> bool:
+        chain = self.attr_chain(call.func)
+        if not chain:
+            return False
+        if chain[-1] in ("jit", "pmap") and (
+                len(chain) == 1 and chain[0] in self.jit_names
+                or len(chain) > 1 and chain[0] in self.jax_aliases):
+            return True
+        # functools.partial(jax.jit, ...) counts as building a jit object
+        if chain[-1] == "partial" and call.args:
+            inner = self.attr_chain(call.args[0])
+            return bool(inner) and inner[-1] in ("jit", "pmap") and (
+                inner[0] in self.jax_aliases or inner[0] in self.jit_names)
+        return False
+
+
+class Checker:
+    """Base: subclasses set `name`/`description` and implement `check`
+    (per module) or `check_project` (whole file set at once)."""
+    name = "?"
+    description = ""
+    scope = "module"            # "module" | "project"
+
+    def check(self, mod: ModuleSource) -> Iterator[Finding]:
+        return iter(())
+
+    def check_project(self, mods: Sequence[ModuleSource]) -> Iterator[Finding]:
+        return iter(())
+
+    def finding(self, mod: ModuleSource, node: ast.AST, message: str,
+                ) -> Finding:
+        return Finding(checker=self.name, path=mod.path,
+                       line=getattr(node, "lineno", 0), message=message,
+                       source=mod.src(node))
+
+
+# --------------------------------------------------------------- tracer-leak
+class TracerLeakChecker(Checker):
+    """Module-level jax array construction.
+
+    The PR 3 bug class: `kernels/waterfill/ref.py` held a module-level
+    `jnp` constant, the module was imported lazily from inside a jitted
+    function, and the "constant" was created *mid-trace* — captured as a
+    tracer that leaked out of its trace. Any module-scope jnp/jax.random
+    call is one lazy import away from the same failure, and even when
+    imported eagerly it pins device memory and commits a backend at import
+    time. Function *default arguments* evaluate at import time too.
+    """
+    name = "tracer-leak"
+    description = ("module-level jnp/jax.random array construction "
+                   "(evaluated at import time; a tracer if imported "
+                   "mid-trace — the PR 3 waterfill/ref.py bug)")
+
+    def check(self, mod: ModuleSource) -> Iterator[Finding]:
+        yield from self._scan_body(mod, mod.tree.body)
+
+    def _scan_body(self, mod, body) -> Iterator[Finding]:
+        for stmt in body:
+            if isinstance(stmt, ast.ClassDef):
+                yield from self._scan_body(mod, stmt.body)
+            elif isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                # only the defaults evaluate at import time
+                for default in (stmt.args.defaults + stmt.args.kw_defaults):
+                    if default is not None:
+                        yield from self._scan_expr(mod, default)
+            else:
+                yield from self._scan_expr(mod, stmt)
+
+    def _scan_expr(self, mod, root) -> Iterator[Finding]:
+        # skip lambda/def subtrees: their bodies evaluate later, not at import
+        stack = [root]
+        while stack:
+            node = stack.pop()
+            if isinstance(node, (ast.Lambda, ast.FunctionDef,
+                                 ast.AsyncFunctionDef)):
+                continue
+            if isinstance(node, ast.Call):
+                ctor = mod.is_jnp_call(node)
+                if ctor and not mod.suppressed(node, self.name):
+                    yield self.finding(
+                        mod, node,
+                        f"module-level jax array construction "
+                        f"`{ctor}(...)` runs at import time — a lazy "
+                        f"import mid-trace captures a tracer (use a "
+                        f"Python scalar / np array, or build inside the "
+                        f"function)")
+            stack.extend(ast.iter_child_nodes(node))
+
+
+# ------------------------------------------------------------ retrace-hazard
+class RetraceHazardChecker(Checker):
+    """Silent recompilation / trace-error hazards.
+
+    (a) `jax.jit`/`jax.pmap` objects built inside a `for`/`while` body:
+        the compile cache keys on function identity, so every iteration
+        gets a fresh cache — the retrace storm PR 1 was built to kill.
+    (b) Python `if`/`while` whose test reads a *non-static* parameter of
+        the enclosing jit-decorated function: branching on a traced value
+        either raises ConcretizationTypeError or, when the value is a
+        weakly-typed Python scalar promoted by the caller, silently forks
+        the compile cache per value.
+    """
+    name = "retrace-hazard"
+    description = ("jit construction inside loops; Python control flow on "
+                   "traced (non-static) jit parameters")
+
+    def check(self, mod: ModuleSource) -> Iterator[Finding]:
+        yield from self._jit_in_loop(mod)
+        yield from self._branch_on_traced(mod)
+
+    def _jit_in_loop(self, mod) -> Iterator[Finding]:
+        for loop in ast.walk(mod.tree):
+            if not isinstance(loop, (ast.For, ast.While)):
+                continue
+            for node in ast.walk(loop):
+                if node is loop:
+                    continue
+                if isinstance(node, ast.Call) and mod.is_jit_call(node) \
+                        and not mod.suppressed(node, self.name):
+                    yield self.finding(
+                        mod, node,
+                        "jax.jit/pmap object created inside a loop body — "
+                        "the compile cache keys on function identity, so "
+                        "each iteration traces afresh (hoist the jitted "
+                        "callable out of the loop)")
+
+    @staticmethod
+    def _static_params(mod, fn: ast.FunctionDef) -> Optional[Set[str]]:
+        """Param names marked static, or None if fn is not jit-decorated."""
+        jit_deco = None
+        for deco in fn.decorator_list:
+            chain = mod.attr_chain(deco)
+            if chain and chain[-1] in ("jit", "pmap") and (
+                    chain[0] in mod.jax_aliases
+                    or chain[0] in mod.jit_names):
+                return set()                   # bare @jax.jit: nothing static
+            if isinstance(deco, ast.Call):
+                if mod.is_jit_call(deco):
+                    jit_deco = deco
+        if jit_deco is None:
+            return None
+        params = [a.arg for a in (jit_deco and _all_args(fn))]
+        static: Set[str] = set()
+        for kw in jit_deco.keywords:
+            if kw.arg in ("static_argnums", "static_broadcasted_argnums"):
+                for idx in _int_literals(kw.value):
+                    if 0 <= idx < len(params):
+                        static.add(params[idx])
+            elif kw.arg == "static_argnames":
+                for name in _str_literals(kw.value):
+                    static.add(name)
+            elif kw.arg == "donate_argnums":
+                pass
+        return static
+
+    def _branch_on_traced(self, mod) -> Iterator[Finding]:
+        for fn in ast.walk(mod.tree):
+            if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            static = self._static_params(mod, fn)
+            if static is None:
+                continue
+            traced = {a.arg for a in _all_args(fn)} - static - {"self"}
+            for node in ast.walk(fn):
+                if not isinstance(node, (ast.If, ast.While)):
+                    continue
+                test = node.test
+                if _is_none_check(test):
+                    continue
+                names = {n.id for n in ast.walk(test)
+                         if isinstance(n, ast.Name)
+                         and isinstance(n.ctx, ast.Load)}
+                hit = sorted(names & traced)
+                if hit and not mod.suppressed(node, self.name):
+                    yield self.finding(
+                        mod, node,
+                        f"Python `{'if' if isinstance(node, ast.If) else 'while'}`"
+                        f" on traced jit parameter(s) {', '.join(hit)} — "
+                        f"use jnp.where/lax.cond, or mark the argument "
+                        f"static (static_argnums/static_argnames)")
+
+
+# ----------------------------------------------------------------- host-sync
+class HostSyncChecker(Checker):
+    """Device->host synchronization where it stalls or breaks the pipeline.
+
+    Inside traced code (jit/pmap bodies, functions handed to
+    lax.scan/while_loop/vmap/...) a host pull is a trace-time error or a
+    silent constant-folding bug, so `.item()/.tolist()/float()/int()/np.*`
+    calls there are flagged everywhere. In the hot-path packages
+    (configured via `hot_prefixes`, default core/ kernels/ sim/) even
+    *untraced* per-event pulls are flagged — PR 3's `next_departure` work
+    existed precisely because one `(N,)` host pull per event dominated the
+    closed-loop budget.
+    """
+    name = "host-sync"
+    description = ("device->host pulls (.item()/.tolist()/float()/np.*) "
+                   "inside traced code anywhere, and in hot-path packages "
+                   "even outside it")
+
+    def __init__(self, hot_prefixes: Sequence[str] = (
+            "src/repro/core/", "src/repro/kernels/", "src/repro/sim/")):
+        self.hot_prefixes = tuple(hot_prefixes)
+
+    def check(self, mod: ModuleSource) -> Iterator[Finding]:
+        traced_nodes = self._traced_functions(mod)
+        seen: Set[int] = set()
+        for region in traced_nodes:
+            for node in ast.walk(region):
+                if id(node) in seen:
+                    continue
+                msg = self._sync_in_trace(mod, node)
+                if msg:
+                    seen.add(id(node))
+                    if not mod.suppressed(node, self.name):
+                        yield self.finding(mod, node, msg + " inside traced "
+                                           "code (jit/scan/vmap body)")
+        if mod.path.startswith(self.hot_prefixes):
+            for node in ast.walk(mod.tree):
+                if id(node) in seen:
+                    continue
+                msg = self._hot_pull(mod, node)
+                if msg and not mod.suppressed(node, self.name):
+                    seen.add(id(node))
+                    yield self.finding(
+                        mod, node, msg + " in a hot-path package — a "
+                        "device sync per call (batch it device-side or "
+                        "keep a host mirror)")
+
+    # which function bodies are traced?
+    def _traced_functions(self, mod) -> List[ast.AST]:
+        defs: Dict[str, ast.AST] = {}
+        for node in ast.walk(mod.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                defs[node.name] = node
+        traced: List[ast.AST] = []
+        for node in ast.walk(mod.tree):
+            # decorated defs
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                for deco in node.decorator_list:
+                    if (isinstance(deco, ast.Call) and mod.is_jit_call(deco)) \
+                            or (mod.attr_chain(deco)
+                                and mod.attr_chain(deco)[-1] in ("jit", "pmap")
+                                and (mod.attr_chain(deco)[0] in mod.jax_aliases
+                                     or mod.attr_chain(deco)[0]
+                                     in mod.jit_names)):
+                        traced.append(node)
+            # functions handed to lax.scan / while_loop / vmap / jit(...)
+            if isinstance(node, ast.Call):
+                chain = mod.attr_chain(node.func)
+                if chain and chain[-1] in TRACED_WRAPPERS and (
+                        chain[0] in mod.jax_aliases
+                        or chain[0] in mod.lax_aliases
+                        or chain[0] in mod.jit_names
+                        or chain[0] in mod.jnp_aliases):
+                    for arg in node.args:
+                        if isinstance(arg, ast.Lambda):
+                            traced.append(arg)
+                        elif isinstance(arg, ast.Name) and arg.id in defs:
+                            traced.append(defs[arg.id])
+        return traced
+
+    def _sync_in_trace(self, mod, node) -> Optional[str]:
+        if isinstance(node, ast.Call):
+            if isinstance(node.func, ast.Attribute) \
+                    and node.func.attr in HOST_SYNC_METHODS:
+                return f"`.{node.func.attr}()` call"
+            chain = mod.attr_chain(node.func)
+            if chain and chain[0] in mod.np_aliases and len(chain) > 1:
+                return f"numpy call `{'.'.join(chain)}(...)`"
+            if isinstance(node.func, ast.Name) \
+                    and node.func.id in ("float", "int", "bool") \
+                    and node.args and not isinstance(node.args[0],
+                                                     ast.Constant):
+                return f"`{node.func.id}(...)` coercion"
+        return None
+
+    def _hot_pull(self, mod, node) -> Optional[str]:
+        if not isinstance(node, ast.Call):
+            return None
+        if isinstance(node.func, ast.Attribute) \
+                and node.func.attr in ("item", "tolist"):
+            return f"`.{node.func.attr}()` device pull"
+        if isinstance(node.func, ast.Name) \
+                and node.func.id in ("float", "int") and node.args:
+            if any(isinstance(n, ast.Subscript)
+                   for n in ast.walk(node.args[0])):
+                return (f"`{node.func.id}(...)` pull of an indexed "
+                        f"device value")
+        return None
+
+
+# --------------------------------------------------------------- dtype-drift
+class DtypeDriftChecker(Checker):
+    """Array constructors without an explicit dtype in arena-building code.
+
+    The arenas are padded, stacked and vmapped across scenarios, cached on
+    disk, and compared bitwise across runs — a constructor that silently
+    picks float64 on the numpy side (`np.full(N, 8.0)`) and then downcasts
+    at `jnp.asarray`, or flips with `jax_enable_x64`, is a latent numerics
+    change that no test pins. Scoped to the configured arena/hot packages;
+    `array`/`asarray` are exempt (they carry their input's dtype).
+    """
+    name = "dtype-drift"
+    description = ("jnp/np zeros/ones/full/empty/arange without an "
+                   "explicit dtype in arena-building code")
+
+    def __init__(self, prefixes: Sequence[str] = (
+            "src/repro/core/", "src/repro/kernels/", "src/repro/train/",
+            "src/repro/launch/", "src/repro/models/")):
+        self.prefixes = tuple(prefixes)
+
+    def check(self, mod: ModuleSource) -> Iterator[Finding]:
+        if not mod.path.startswith(self.prefixes):
+            return
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            chain = mod.attr_chain(node.func)
+            if len(chain) != 2 or chain[1] not in DTYPE_REQUIRED:
+                continue
+            if chain[0] not in mod.jnp_aliases | mod.np_aliases:
+                continue
+            if any(kw.arg == "dtype" for kw in node.keywords):
+                continue
+            if len(node.args) > DTYPE_POSITION[chain[1]]:
+                continue
+            if mod.suppressed(node, self.name):
+                continue
+            yield self.finding(
+                mod, node,
+                f"`{'.'.join(chain)}(...)` without an explicit dtype in "
+                f"arena-building code — the default is a silent "
+                f"platform/x64 policy choice (pass dtype=...)")
+
+
+# ----------------------------------------------------------- donation-misuse
+class DonationMisuseChecker(Checker):
+    """Reads of a buffer after it was donated.
+
+    `donate_argnums` invalidates the caller's input buffer at dispatch; a
+    later read of the same name returns garbage (or raises, backend-
+    dependent). Flags call sites of any locally-visible jitted callable
+    built with `donate_argnums=` where the donated argument expression is
+    neither rebound by the call's own assignment targets nor dead
+    afterwards.
+    """
+    name = "donation-misuse"
+    description = ("argument read after being passed through a "
+                   "donate_argnums position")
+
+    def check(self, mod: ModuleSource) -> Iterator[Finding]:
+        donors = self._donating_callables(mod)
+        if not donors:
+            return
+        for fn in ast.walk(mod.tree):
+            if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            yield from self._scan_function(mod, fn, donors)
+
+    def _donating_callables(self, mod) -> Dict[str, Tuple[int, ...]]:
+        """name (last segment) -> donated positions, from
+        `X = jax.jit(..., donate_argnums=...)` bindings and jit-decorated
+        defs."""
+        donors: Dict[str, Tuple[int, ...]] = {}
+
+        def donate_positions(call: ast.Call) -> Optional[Tuple[int, ...]]:
+            if not mod.is_jit_call(call):
+                return None
+            for kw in call.keywords:
+                if kw.arg in ("donate_argnums", "donate_argnames"):
+                    pos = tuple(_int_literals(kw.value))
+                    return pos or None
+            return None
+
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.Assign) and isinstance(node.value,
+                                                           ast.Call):
+                pos = donate_positions(node.value)
+                if pos:
+                    for tgt in node.targets:
+                        chain = mod.attr_chain(tgt)
+                        if chain:
+                            donors[chain[-1]] = pos
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                for deco in node.decorator_list:
+                    if isinstance(deco, ast.Call):
+                        pos = donate_positions(deco)
+                        if pos:
+                            donors[node.name] = pos
+        return donors
+
+    def _scan_function(self, mod, fn, donors) -> Iterator[Finding]:
+        stmts = [n for n in ast.walk(fn)
+                 if isinstance(n, ast.stmt) and n is not fn]
+        for stmt in stmts:
+            for call in ast.walk(stmt):
+                if not isinstance(call, ast.Call):
+                    continue
+                chain = mod.attr_chain(call.func)
+                if not chain or chain[-1] not in donors:
+                    continue
+                for pos in donors[chain[-1]]:
+                    if pos >= len(call.args):
+                        continue
+                    arg = call.args[pos]
+                    if not isinstance(arg, (ast.Name, ast.Attribute)):
+                        continue
+                    expr = ast.unparse(arg)
+                    if self._rebound(stmt, expr):
+                        continue
+                    read = self._later_read(fn, stmt, expr)
+                    if read is not None \
+                            and not mod.suppressed(read, self.name):
+                        yield self.finding(
+                            mod, read,
+                            f"`{expr}` read after being donated to "
+                            f"`{'.'.join(chain)}` (donate_argnums "
+                            f"invalidates the caller's buffer — rebind "
+                            f"it to the call's result first)")
+
+    @staticmethod
+    def _rebound(stmt, expr: str) -> bool:
+        if isinstance(stmt, ast.Assign):
+            for tgt in stmt.targets:
+                for el in ast.walk(tgt):
+                    if isinstance(el, (ast.Name, ast.Attribute)) \
+                            and ast.unparse(el) == expr:
+                        return True
+        return False
+
+    @staticmethod
+    def _later_read(fn, stmt, expr: str) -> Optional[ast.AST]:
+        after = getattr(stmt, "end_lineno", stmt.lineno)
+        for node in ast.walk(fn):
+            if isinstance(node, (ast.Name, ast.Attribute)) \
+                    and isinstance(getattr(node, "ctx", None), ast.Load) \
+                    and getattr(node, "lineno", 0) > after \
+                    and ast.unparse(node) == expr:
+                return node
+        return None
+
+
+# ------------------------------------------------------ fingerprint-coverage
+class FingerprintCoverageChecker(Checker):
+    """Compile-/output-relevant config fields missing from every cache key.
+
+    The sweep cache, dataset store and CI artifact cache are only correct
+    if their keys capture every input that changes the bytes they store —
+    the repo has one fingerprint per identity (SimRequest.content_hash,
+    Backend.fingerprint, train.data.shard_key, TrainState.weights_hash).
+    For each configured dataclass, every field must either be referenced
+    by some fingerprint-family function (by attribute/string name) or the
+    class must be serialized wholesale there (repr/asdict/astuple/
+    dataclasses.fields/tree_digest on a matching receiver).
+    """
+    name = "fingerprint-coverage"
+    description = ("dataclass fields of cache-identity classes not "
+                   "reflected in any fingerprint/content_hash/shard_key "
+                   "implementation")
+    scope = "project"
+
+    FINGERPRINT_FUNCS = {"fingerprint", "content_hash", "result_key",
+                         "shard_key", "dataset_key", "weights_hash"}
+    WHOLESALE_FUNCS = {"repr", "asdict", "astuple", "fields", "tree_digest"}
+    # class -> receiver-name fragments that tie a wholesale call to it
+    CLASSES = {
+        "M4Config": ("cfg", "m4cfg"),
+        "SimRequest": ("request", "req"),
+        "NetConfig": ("NetConfig", "config"),
+    }
+
+    def check_project(self, mods: Sequence[ModuleSource]) -> Iterator[Finding]:
+        fields = self._class_fields(mods)
+        bodies = self._fingerprint_bodies(mods)
+        if not bodies:
+            return
+        attrs: Set[str] = set()
+        strings: Set[str] = set()
+        wholesale: List[str] = []
+        for _, fn in bodies:
+            a, s, w = self._body_refs(fn)
+            attrs |= a
+            strings |= s
+            wholesale += w
+        for cls, (mod, node, names) in fields.items():
+            ties = self.CLASSES.get(cls, ())
+            has_wholesale = any(t in w for w in wholesale for t in ties)
+            for fname, fnode in names:
+                if fname in attrs or fname in strings or has_wholesale:
+                    continue
+                if mod.suppressed(fnode, self.name):
+                    continue
+                yield self.finding(
+                    mod, fnode,
+                    f"field {cls}.{fname} is never referenced by any "
+                    f"fingerprint/content-hash implementation "
+                    f"({', '.join(sorted(self.FINGERPRINT_FUNCS))}) — "
+                    f"if it changes simulator output or compiled code, "
+                    f"cached results can alias across values")
+
+    def _class_fields(self, mods):
+        out = {}
+        for mod in mods:
+            for node in ast.walk(mod.tree):
+                if isinstance(node, ast.ClassDef) \
+                        and node.name in self.CLASSES:
+                    names = []
+                    for stmt in node.body:
+                        if isinstance(stmt, ast.AnnAssign) \
+                                and isinstance(stmt.target, ast.Name):
+                            ann = ast.unparse(stmt.annotation)
+                            if "ClassVar" in ann:
+                                continue
+                            names.append((stmt.target.id, stmt))
+                    out[node.name] = (mod, node, names)
+        return out
+
+    def _fingerprint_bodies(self, mods):
+        out = []
+        for mod in mods:
+            for node in ast.walk(mod.tree):
+                if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                        and node.name in self.FINGERPRINT_FUNCS:
+                    out.append((mod, node))
+        return out
+
+    def _body_refs(self, fn):
+        """(attribute names, string constants, wholesale-call arg texts)
+        referenced by a fingerprint body — docstrings excluded, so a field
+        merely *mentioned* in prose doesn't count as covered."""
+        attrs: Set[str] = set()
+        strings: Set[str] = set()
+        wholesale: List[str] = []
+        body = list(fn.body)
+        if body and isinstance(body[0], ast.Expr) \
+                and isinstance(body[0].value, ast.Constant) \
+                and isinstance(body[0].value.value, str):
+            body = body[1:]
+        for stmt in body:
+            for node in ast.walk(stmt):
+                if isinstance(node, ast.Attribute):
+                    attrs.add(node.attr)
+                elif isinstance(node, ast.Name):
+                    attrs.add(node.id)
+                elif isinstance(node, ast.Constant) \
+                        and isinstance(node.value, str):
+                    strings.add(node.value)
+                elif isinstance(node, ast.Call):
+                    chain_parts = []
+                    f = node.func
+                    while isinstance(f, ast.Attribute):
+                        chain_parts.append(f.attr)
+                        f = f.value
+                    if isinstance(f, ast.Name):
+                        chain_parts.append(f.id)
+                    if chain_parts and chain_parts[0] in self.WHOLESALE_FUNCS \
+                            and node.args:
+                        wholesale.append(ast.unparse(node.args[0]))
+        return attrs, strings, wholesale
+
+
+# ----------------------------------------------------------------- utilities
+def _all_args(fn) -> list:
+    a = fn.args
+    return (a.posonlyargs + a.args + a.kwonlyargs
+            + ([a.vararg] if a.vararg else [])
+            + ([a.kwarg] if a.kwarg else []))
+
+
+def _int_literals(node) -> List[int]:
+    out = []
+    for n in ast.walk(node):
+        if isinstance(n, ast.Constant) and isinstance(n.value, int) \
+                and not isinstance(n.value, bool):
+            out.append(n.value)
+    return out
+
+
+def _str_literals(node) -> List[str]:
+    return [n.value for n in ast.walk(node)
+            if isinstance(n, ast.Constant) and isinstance(n.value, str)]
+
+
+def _is_none_check(test) -> bool:
+    """`x is None` / `x is not None` concretize fine under tracing."""
+    return isinstance(test, ast.Compare) and all(
+        isinstance(op, (ast.Is, ast.IsNot)) for op in test.ops)
+
+
+def default_checkers() -> List[Checker]:
+    return [TracerLeakChecker(), RetraceHazardChecker(), HostSyncChecker(),
+            DtypeDriftChecker(), DonationMisuseChecker(),
+            FingerprintCoverageChecker()]

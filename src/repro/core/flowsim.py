@@ -25,23 +25,23 @@ def waterfill(cap: np.ndarray, paths: List[np.ndarray]) -> np.ndarray:
     """
     F = len(paths)
     if F == 0:
-        return np.zeros(0)
-    rates = np.zeros(F)
+        return np.zeros(0, np.float64)
+    rates = np.zeros(F, np.float64)
     frozen = np.zeros(F, dtype=bool)
     avail = cap.astype(np.float64).copy()
     flat = np.concatenate(paths) if F else np.zeros(0, np.int64)
-    fidx = np.repeat(np.arange(F), [len(p) for p in paths])
+    fidx = np.repeat(np.arange(F, dtype=np.int64), [len(p) for p in paths])
 
     for _ in range(64):  # bounded; #distinct bottlenecks <= L
         live = ~frozen[fidx]
         if not live.any():
             break
-        n_l = np.zeros(len(cap))
+        n_l = np.zeros(len(cap), np.float64)
         np.add.at(n_l, flat[live], 1.0)
         with np.errstate(divide="ignore", invalid="ignore"):
             share = np.where(n_l > 0, avail / n_l, np.inf)
         # per-flow bottleneck share
-        f_share = np.full(F, np.inf)
+        f_share = np.full(F, np.inf, np.float64)
         np.minimum.at(f_share, fidx[live], share[flat[live]])
         theta = f_share[~frozen].min()
         newly = (~frozen) & (f_share <= theta * (1 + 1e-12))
@@ -77,9 +77,9 @@ def run_flowsim(topo, flows, until: Optional[float] = None,
     arrive_ptr = 0
     active: List[int] = []
     remaining = np.array([float(f.size) * 8.0 for f in flows])  # bits
-    fct = np.full(n, np.nan)
+    fct = np.full(n, np.nan, np.float64)
     t = 0.0
-    rates = np.zeros(0)
+    rates = np.zeros(0, np.float64)
     ev_t, ev_k, ev_f = [], [], []
 
     def recompute():

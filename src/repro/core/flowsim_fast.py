@@ -63,7 +63,7 @@ def _waterfill_masked(a, cap, active, *, max_rounds=32, mode="xla"):
 
     frozen0 = ~active
     rates, _, _ = jax.lax.while_loop(
-        cond, body, (jnp.zeros((N,)), frozen0, 0))
+        cond, body, (jnp.zeros((N,), jnp.float32), frozen0, 0))
     return jnp.where(active, rates, 0.0)
 
 
@@ -92,8 +92,9 @@ def _event_scan_core(a, cap, sizes_bits, arr_times, arr_order, mode="xla",
         ptr = ptr + is_arr.astype(jnp.int32)
         return (remaining, active, done, ptr, t_ev, fct), None
 
-    init = (jnp.zeros((N,)), jnp.zeros((N,), bool), jnp.zeros((N,), bool),
-            jnp.int32(0), 0.0, jnp.zeros((N,)))
+    init = (jnp.zeros((N,), jnp.float32), jnp.zeros((N,), bool),
+            jnp.zeros((N,), bool), jnp.int32(0), 0.0,
+            jnp.zeros((N,), jnp.float32))
     length = 2 * N if num_events is None else num_events
     (remaining, active, done, ptr, t, fct), _ = jax.lax.scan(
         body, init, None, length=length)
@@ -140,9 +141,9 @@ def _pack(topo, flows, n_total=None, l_total=None):
     a = np.zeros((N, L), np.float32)
     for f in flows:
         a[f.fid, f.path] = 1.0
-    sizes = np.full(N, 8.0)
+    sizes = np.full(N, 8.0, np.float64)
     sizes[:n] = [float(f.size) * 8.0 for f in flows]
-    cap = np.ones(L)
+    cap = np.ones(L, np.float64)
     cap[:topo.num_links] = topo.capacity
     t_arr = np.full(N, BIG, np.float32)
     t_arr[:n] = [f.t_arrival for f in flows]
@@ -156,8 +157,9 @@ def _result(topo, flows, fct_abs, wall):
     fcts = fct_abs[:len(flows)] - arr
     ideal = np.array([topo.ideal_fct(f.size, f.path) for f in flows])
     return FlowSimResult(fcts=fcts, slowdowns=fcts / ideal,
-                         event_times=np.zeros(0), event_types=np.zeros(0),
-                         event_fids=np.zeros(0), wallclock=wall)
+                         event_times=np.zeros(0, np.float64),
+                         event_types=np.zeros(0, np.float64),
+                         event_fids=np.zeros(0, np.float64), wallclock=wall)
 
 
 def run_flowsim_fast(topo, flows):

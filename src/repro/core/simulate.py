@@ -68,7 +68,7 @@ def _build_snapshot_dense(cfg: M4Config, flow_links, fid, active_mask):
     score = jnp.where(shares & active_mask, 1.0, 0.0).at[fid].set(-1.0)
     # stable top-(SF-1) by score (ties -> lower index)
     N = flow_links.shape[0]
-    key = score * N - jnp.arange(N)
+    key = score * N - jnp.arange(N, dtype=jnp.int32)
     k = min(SF - 1, N)
     _, idx = jax.lax.top_k(key, k)
     others_valid = score[idx] > 0
@@ -79,7 +79,8 @@ def _build_snapshot_dense(cfg: M4Config, flow_links, fid, active_mask):
     # masked slots scatter to the dump row N, never aliasing a live row
     idx = jnp.where(others_valid, idx, N)
     snap_f = jnp.concatenate([fid[None], idx])
-    snap_mask = jnp.concatenate([jnp.ones((1,)), others_valid.astype(jnp.float32)])
+    snap_mask = jnp.concatenate([jnp.ones((1,), jnp.float32),
+                                 others_valid.astype(jnp.float32)])
     return snap_f, snap_mask
 
 
@@ -98,7 +99,7 @@ def _build_snapshot(cfg: M4Config, static, link_occ, fid):
     uniq = _dedupe_ascending(vals, SF - 1, N)
     others_valid = uniq < N
     snap_f = jnp.concatenate([fid[None].astype(uniq.dtype), uniq])
-    snap_mask = jnp.concatenate([jnp.ones((1,)),
+    snap_mask = jnp.concatenate([jnp.ones((1,), jnp.float32),
                                  others_valid.astype(jnp.float32)])
     return snap_f, snap_mask
 
@@ -168,7 +169,7 @@ def make_event_step(cfg: M4Config, static, num_links: int,
     assert snapshot_impl in ("incremental", "dense"), snapshot_impl
     legacy = snapshot_impl == "dense"
     SF, P = cfg.snap_flows, cfg.max_path
-    edge_f = jnp.repeat(jnp.arange(SF), P)
+    edge_f = jnp.repeat(jnp.arange(SF, dtype=jnp.int32), P)
 
     def event_step(params, state, t_ev, fid, is_arrival):
         """Process one flow-level event; returns (state, sldn_pred, snap)."""
@@ -261,16 +262,18 @@ def init_sim_state(params, cfg: M4Config, static, N, num_links: int):
         [static["link_feat"][:L],
          jnp.broadcast_to(cfg_vec, (L, cfg_vec.shape[0]))], -1)
     link_h = jnp.tanh(mlp(params["link_init"], l_in))
-    link_h = jnp.concatenate([link_h, jnp.zeros((1, H))], 0)
+    link_h = jnp.concatenate([link_h, jnp.zeros((1, H), jnp.float32)], 0)
     return dict(
-        flow_h=jnp.zeros((N + 1, H)),
+        flow_h=jnp.zeros((N + 1, H), jnp.float32),
         link_h=link_h,
-        flow_last=jnp.zeros((N + 1,)), link_last=jnp.zeros((L + 1,)),
+        flow_last=jnp.zeros((N + 1,), jnp.float32),
+        link_last=jnp.zeros((L + 1,), jnp.float32),
         arrived=jnp.zeros((N + 1,), bool), done=jnp.zeros((N + 1,), bool),
         link_occ=jnp.zeros((L + 1, K), bool),
-        t_dep=jnp.full((N + 1,), BIG), fct=jnp.zeros((N + 1,)),
+        t_dep=jnp.full((N + 1,), BIG, jnp.float32),
+        fct=jnp.zeros((N + 1,), jnp.float32),
         t_arr=jnp.concatenate([jnp.asarray(static["t_arrival"]),
-                               jnp.zeros((1,))]))
+                               jnp.zeros((1,), jnp.float32)]))
 
 
 def _open_loop_core(params, cfg: M4Config, num_links: int, static, arr_order,
@@ -588,7 +591,13 @@ class M4Simulator:
         self._step = jax.jit(make_event_step(cfg, self.static, self.num_links),
                              donate_argnums=(1,))
         self.t = 0.0
-        self.fcts = np.full(self.N, np.nan)
+        self.fcts = np.full(self.N, np.nan, np.float64)
+        # Host-side mirror of state["t_arr"]: arrival times only ever enter
+        # the device arena from host floats (inject_arrival), so the mirror
+        # lets commit_departure compute FCTs without a per-departure device
+        # pull blocking the donated-arena event pipeline.
+        self.t_arr_host = np.asarray(self.state["t_arr"],
+                                     np.float64)[:self.N].copy()
 
     def next_departure(self):
         t, i = _next_departure_scan(self.state["t_dep"],
@@ -599,6 +608,8 @@ class M4Simulator:
 
     def inject_arrival(self, fid: int, t: float):
         self.t = t
+        # float32 cast keeps the mirror bitwise-equal to the device value
+        self.t_arr_host[fid] = np.float32(t)
         self.state["t_arr"] = self.state["t_arr"].at[fid].set(t)
         self.state, _, _ = self._step(self.params, self.state, jnp.float32(t),
                                       jnp.int32(fid), jnp.bool_(True))
@@ -610,10 +621,10 @@ class M4Simulator:
                                       jnp.int32(fid), jnp.bool_(False))
         self.state["done"] = self.state["done"].at[fid].set(True)
         self.state["t_dep"] = self.state["t_dep"].at[fid].set(BIG)
-        self.fcts[fid] = t - float(self.state["t_arr"][fid])
+        self.fcts[fid] = t - self.t_arr_host[fid]
 
     def completion_times(self) -> np.ndarray:
         """Absolute completion time per flow (NaN while unfinished) — the
         `repro.sim` closed-loop session contract."""
-        arr = np.asarray(self.state["t_arr"])[:self.N]
-        return np.where(np.isfinite(self.fcts), arr + self.fcts, np.nan)
+        return np.where(np.isfinite(self.fcts),
+                        self.t_arr_host + self.fcts, np.nan)

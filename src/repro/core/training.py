@@ -46,11 +46,13 @@ def event_scan_losses(params, cfg: M4Config, b):
         [b["link_feat"], jnp.broadcast_to(cfg_vec, (L, cfg_vec.shape[0]))], -1)
     from ..nn import mlp
     link_h0 = jnp.concatenate(
-        [jnp.tanh(mlp(params["link_init"], l_in)), jnp.zeros((1, H))], 0)
-    flow_h0 = jnp.zeros((N + 1, H))
+        [jnp.tanh(mlp(params["link_init"], l_in)),
+         jnp.zeros((1, H), jnp.float32)], 0)
+    flow_h0 = jnp.zeros((N + 1, H), jnp.float32)
 
     carry0 = dict(flow_h=flow_h0, link_h=link_h0,
-                  flow_last=jnp.zeros((N + 1,)), link_last=jnp.zeros((L + 1,)))
+                  flow_last=jnp.zeros((N + 1,), jnp.float32),
+                  link_last=jnp.zeros((L + 1,), jnp.float32))
 
     def step(carry, ev):
         t, etype, fid = ev["t"], ev["etype"], ev["fid"]
@@ -89,7 +91,7 @@ def event_scan_losses(params, cfg: M4Config, b):
 
         # spatial update on the bipartite snapshot graph
         SF, P = cfg.snap_flows, cfg.max_path
-        edge_f = jnp.repeat(jnp.arange(SF), P)
+        edge_f = jnp.repeat(jnp.arange(SF, dtype=jnp.int32), P)
         f_h2, l_h2 = spatial_update(params, cfg, f_h, l_h, edge_f,
                                     ev["edge_l"], ev["edge_mask"], cfg_vec)
 

@@ -8,7 +8,7 @@ import jax.numpy as jnp
 
 def incidence_from_edges(edge_f, edge_l, edge_mask, SF, SL):
     """Edge list -> dense 0/1 incidence matrix (SF, SL)."""
-    m = jnp.zeros((SF, SL))
+    m = jnp.zeros((SF, SL), jnp.float32)
     return m.at[edge_f, edge_l].add(edge_mask)
 
 

@@ -151,8 +151,10 @@ def gnn_rounds(layers, f, l, edge_f, edge_l, edge_mask, num_links, *,
         # then every round is dense matmuls — the kernel's formulation run
         # by XLA; segment-sum survives as the oracle in bipartite/ref.py
         SF, SL = f.shape[0], l.shape[0]
-        fo = (edge_f[:, None] == jnp.arange(SF)[None, :]).astype(f.dtype)
-        lo = (edge_l[:, None] == jnp.arange(SL)[None, :]).astype(f.dtype) \
+        fo = (edge_f[:, None]
+              == jnp.arange(SF, dtype=jnp.int32)[None, :]).astype(f.dtype)
+        lo = (edge_l[:, None]
+              == jnp.arange(SL, dtype=jnp.int32)[None, :]).astype(f.dtype) \
             * edge_mask[:, None]
         return bipartite_rounds_matmul(layers, f, l, fo.T @ lo)
     from .bipartite.ops import bipartite_rounds

@@ -42,7 +42,7 @@ def waterfill_jnp(a, cap, *, max_rounds=64, rowmin=masked_rowmin_ref):
         frozen = frozen | newly | ~has_links
         return rates, frozen, i + 1
 
-    rates0 = jnp.zeros((F,))
+    rates0 = jnp.zeros((F,), jnp.float32)
     frozen0 = ~has_links
     rates, _, _ = jax.lax.while_loop(cond, body, (rates0, frozen0, 0))
     return rates

@@ -57,7 +57,7 @@ def train(cfg, *, steps=100, global_batch=8, seq_len=128, lr=3e-4,
     params = lm.init_params(jax.random.PRNGKey(seed), cfg)
     opt = adamw_init(params)
     err = jax.tree.map(jnp.zeros_like, params) if compress_frac > 0 else \
-        jax.tree.map(lambda x: jnp.zeros((0,)), params)
+        jax.tree.map(lambda x: jnp.zeros((0,), x.dtype), params)
     start = 0
     if ckpt_dir and resume == "auto" and ckpt.latest_step(ckpt_dir) is not None:
         (params, opt), start = ckpt.restore(ckpt_dir, (params, opt))

@@ -219,7 +219,7 @@ def backbone(params, cfg: ArchCfg, batch, *, remat=True, unroll=False):
     B, S, _ = x.shape
     positions = batch.get("positions")
     if positions is None:
-        positions = jnp.arange(S)[None]
+        positions = jnp.arange(S, dtype=jnp.int32)[None]
         if cfg.mrope_sections:
             positions = jnp.broadcast_to(positions[None], (3, B, S))
 
@@ -282,7 +282,7 @@ def _sharded_nll(logits, labels):
     lmax = jax.lax.stop_gradient(logits).max(-1, keepdims=True)
     shifted = (logits - lmax).astype(jnp.float32)
     lse = jnp.log(jnp.exp(shifted).sum(-1))          # lmax cancels in nll
-    sel = jnp.arange(V)[None, None, :] == labels[..., None]
+    sel = jnp.arange(V, dtype=jnp.int32)[None, None, :] == labels[..., None]
     label_logit = jnp.where(sel, shifted, 0.0).sum(-1)
     return lse - label_logit
 

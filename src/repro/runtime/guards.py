@@ -1,0 +1,135 @@
+"""Runtime guards: compile-count budgets and opt-in finite checks.
+
+The static analyzer (`repro.analysis`) catches retrace hazards it can see
+in the source; this module catches the ones it can't — a shape leak, an
+unhashable static arg, a config object that stopped being == stable —
+by asserting on the TRACE_COUNTS compile counters the jitted entry points
+already maintain (trace-time side effects increment them exactly once per
+compilation). Wrap a stage that should reuse cached executables:
+
+    with no_retrace(allowed=1, label="sweep chunk"):
+        backend.run_chunked(requests, chunk_size)
+
+`allowed` is the number of *new* compilations the block may trigger;
+exceeding it raises `RetraceError` naming the counters that moved.
+
+Finite checks are opt-in via REPRO_CHECK_FINITE=1 (they host-sync every
+leaf they inspect, so the call sites stay free no-ops by default):
+
+    check_finite("train outs", outs)            # NaN or Inf -> error
+    check_result_finite("m4", result)           # SimResult semantics
+
+SimResult health is looser than strict finiteness on purpose: NaN is the
+documented "flow never finished" value, so a result is unhealthy only if
+it contains Inf or is NaN wall-to-wall. See docs/ANALYSIS.md and
+DESIGN.md §10.
+"""
+from __future__ import annotations
+
+import os
+from contextlib import contextmanager
+from typing import Dict, Mapping, Optional
+
+import numpy as np
+
+
+class RetraceError(AssertionError):
+    """A guarded block compiled more than its budget allows."""
+
+
+class NonFiniteError(AssertionError):
+    """A guarded value contained NaN/Inf where it must not."""
+
+
+def _default_counters() -> Dict[str, Mapping[str, int]]:
+    """The repo's three compile-counter families, imported lazily so that
+    importing guards never drags jax in by itself."""
+    from ..core import flowsim_fast, simulate
+    from ..train import loop as train_loop
+    return {"core.simulate": simulate.TRACE_COUNTS,
+            "core.flowsim_fast": flowsim_fast.TRACE_COUNTS,
+            "train.loop": train_loop.TRACE_COUNTS}
+
+
+def trace_total(counters: Optional[Mapping[str, Mapping[str, int]]] = None,
+                ) -> int:
+    """Total compilations recorded across the given counter families
+    (default: every TRACE_COUNTS in the repo)."""
+    counters = counters if counters is not None else _default_counters()
+    return sum(sum(c.values()) for c in counters.values())
+
+
+def _snapshot(counters: Mapping[str, Mapping[str, int]]) -> Dict[str, Dict[str, int]]:
+    return {fam: dict(c) for fam, c in counters.items()}
+
+
+@contextmanager
+def no_retrace(allowed: int = 0,
+               counters: Optional[Mapping[str, Mapping[str, int]]] = None,
+               label: str = ""):
+    """Assert the block triggers at most `allowed` new compilations.
+
+    `counters` maps family name -> TRACE_COUNTS-style mapping; pass a
+    subset (e.g. only train.loop's) when the block legitimately compiles
+    in another family — eval inside a train epoch compiling a simulator
+    scan is budgeted where the sweep wraps it, not here.
+    """
+    counters = counters if counters is not None else _default_counters()
+    before = _snapshot(counters)
+    yield
+    deltas, new = [], 0
+    for fam, cnt in counters.items():
+        for key, val in cnt.items():
+            delta = val - before[fam].get(key, 0)
+            if delta > 0:
+                deltas.append(f"{fam}.{key}: +{delta}")
+                new += delta
+    if new > allowed:
+        where = f" in {label}" if label else ""
+        raise RetraceError(
+            f"{new} compilation(s){where} where at most {allowed} "
+            f"allowed ({', '.join(deltas)}) — a static arg or arena "
+            "shape is varying across calls (see docs/ANALYSIS.md)")
+
+
+def finite_checks_enabled() -> bool:
+    return os.environ.get("REPRO_CHECK_FINITE", "") not in ("", "0")
+
+
+def check_finite(label: str, tree, allow_nan: bool = False) -> None:
+    """Raise NonFiniteError if any array leaf of `tree` contains Inf (or
+    NaN unless allowed). No-op unless REPRO_CHECK_FINITE=1 — inspecting a
+    device array forces a host sync, so this must stay opt-in."""
+    if not finite_checks_enabled():
+        return
+    import jax
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        arr = np.asarray(leaf)
+        if not np.issubdtype(arr.dtype, np.floating):
+            continue
+        bad = np.isinf(arr) if allow_nan else ~np.isfinite(arr)
+        if bad.any():
+            kind = "Inf" if allow_nan else "NaN/Inf"
+            raise NonFiniteError(
+                f"{label}: {int(bad.sum())} {kind} value(s) at leaf "
+                f"{jax.tree_util.keystr(path) or '<root>'} "
+                f"(shape {arr.shape})")
+
+
+def check_result_finite(label: str, result) -> None:
+    """SimResult health: NaN marks a legally-unfinished flow, so flag only
+    Inf anywhere or an entirely-NaN fct vector (every flow 'unfinished' is
+    a simulator bug, not a traffic pattern). No-op unless
+    REPRO_CHECK_FINITE=1."""
+    if not finite_checks_enabled():
+        return
+    for name in ("fcts", "slowdowns"):
+        arr = np.asarray(getattr(result, name))
+        if np.isinf(arr).any():
+            raise NonFiniteError(
+                f"{label}: SimResult.{name} contains "
+                f"{int(np.isinf(arr).sum())} Inf value(s)")
+        if arr.size and np.isnan(arr).all():
+            raise NonFiniteError(
+                f"{label}: SimResult.{name} is all-NaN over {arr.size} "
+                "flow(s) — no flow ever completed")

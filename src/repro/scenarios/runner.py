@@ -19,6 +19,7 @@ from typing import List, Optional, Sequence, Union
 
 import numpy as np
 
+from ..runtime.guards import check_result_finite, no_retrace
 from ..sim import SimRequest, SimResult
 from .cache import ResultCache, result_key
 from .spec import ScenarioSpec, Sweep
@@ -140,10 +141,17 @@ class SweepRunner:
 
         miss = [i for i, r in enumerate(results) if r is None]
         if miss:
-            fresh = self.backend.run_chunked([requests[i] for i in miss],
-                                             self.chunk_size)
+            # each chunk is one run_many = at most one compiled executable;
+            # more means a static arg or padding shape varied mid-sweep
+            chunks = 1 if not self.chunk_size else \
+                -(-len(miss) // self.chunk_size)
+            with no_retrace(allowed=chunks, label=f"sweep '{name}'"):
+                fresh = self.backend.run_chunked([requests[i] for i in miss],
+                                                 self.chunk_size)
             for i, res in zip(miss, fresh):
                 results[i] = res
+                check_result_finite(f"{self.backend.name}:{specs[i].name}",
+                                    res)
                 if use_cache:
                     self.cache.put(keys[i], res)
 

@@ -47,6 +47,7 @@ from ..optim import adamw_init, adamw_update, clip_by_global_norm
 from ..optim.schedules import linear_warmup_cosine
 from ..runtime import checkpoint as ckpt
 from ..runtime.checkpoint import tree_digest
+from ..runtime.guards import check_finite, no_retrace
 from .batching import make_buckets
 
 # Compiles of the training step, by entry point — the training mirror of
@@ -198,7 +199,7 @@ def make_bucket_step(m4cfg: M4Config, tc: TrainConfig, schedule) -> Callable:
     @jax.jit
     def single_device_step(params, opt, bb):
         TRACE_COUNTS["train_step"] += 1
-        w = jnp.ones((bb["t"].shape[0],))
+        w = jnp.ones((bb["t"].shape[0],), jnp.float32)
         (tot, parts), grads = jax.value_and_grad(
             batch_loss, has_aux=True)(params, bb, w)
         params, opt, lr, gn = update(params, opt, grads)
@@ -237,9 +238,9 @@ def make_bucket_step(m4cfg: M4Config, tc: TrainConfig, schedule) -> Callable:
         B = int(bb["t"].shape[0])
         if B < D:   # tiny tail bucket: one device is plenty (still jitted)
             return single_device_step(params, opt, bb)
-        w = jnp.ones((B,))
+        w = jnp.ones((B,), jnp.float32)
         per = -(-B // D)
-        w = jnp.concatenate([w, jnp.zeros((per * D - B,))])
+        w = jnp.concatenate([w, jnp.zeros((per * D - B,), jnp.float32)])
         return _pstep(params, opt, shard_leaves(bb, D), shard_leaves(w, D))
     return step
 
@@ -319,48 +320,60 @@ def fit(batches: Sequence[EventBatch], m4cfg: M4Config,
             f"{shapes}, {updates_per_epoch} update(s)/epoch x "
             f"{tc.epochs} epochs [{tc.step_mode}]")
 
-    for ep in range(start_epoch, tc.epochs):
-        t0 = time.perf_counter()
-        order = np.arange(len(buckets))
-        if tc.shuffle:
-            # derived from the state's root RNG key by *absolute* epoch
-            # (fold_in, not sequential draws), so a resumed run replays
-            # the identical bucket walk — part of the bitwise guarantee
-            order = np.asarray(jax.random.permutation(
-                jax.random.fold_in(rng, ep), len(buckets)))
-        outs_all, weights = [], []
-        for bi in order:
-            b = buckets[int(bi)]
-            params, opt, outs = step_fn(params, opt, b.arrays)
-            outs = np.asarray(outs)
-            outs_all.append(outs)
-            # per_sim: one row per sim; batch: one bucket-mean row
-            weights.append(np.full(len(outs), b.size / len(outs)))
-        outs = np.concatenate(outs_all)
-        w = np.concatenate(weights)
-        mean = (outs * w[:, None]).sum(0) / w.sum()
-        entry = {"epoch": ep, "loss": float(mean[0]), "sldn": float(mean[1]),
-                 "size": float(mean[2]), "queue": float(mean[3]),
-                 "lr": float(outs[-1, 4]), "grad_norm": float(mean[5]),
-                 "wall_s": round(time.perf_counter() - t0, 3)}
-        if eval_fn is not None and eval_every and \
-                ((ep + 1) % eval_every == 0 or ep + 1 == tc.epochs):
-            entry["eval"] = eval_fn(params)
-        history.append(entry)
-        log(f"[train] epoch {ep}: loss={entry['loss']:.4f} "
-            f"(sldn={entry['sldn']:.4f} size={entry['size']:.4f} "
-            f"queue={entry['queue']:.4f}) lr={entry['lr']:.2e} "
-            f"{entry['wall_s']:.1f}s")
-        if tc.ckpt_dir and ((ep + 1) % tc.ckpt_every == 0
-                            or ep + 1 == tc.epochs):
-            tree = {"params": params, "opt": opt, "rng": rng}
-            ckpt.save(tc.ckpt_dir, ep + 1, tree, keep_last=tc.keep_last)
-            _write_history(tc.ckpt_dir, history)
-            # test hook: deterministic "kill" right after a checkpoint
-            # commits — os._exit skips every cleanup path, so the resume
-            # test exercises exactly what a SIGKILL mid-run leaves behind
-            if os.environ.get("REPRO_TRAIN_ABORT_AFTER_EPOCH") == str(ep + 1):
-                os._exit(17)
+    # compile budget for the whole run: one executable per distinct bucket
+    # shape per step path (tiny tail buckets fall back to the single-device
+    # jit, so a shape can hit two targets). eval_fn compiles in the
+    # simulate counter family, which this guard deliberately excludes —
+    # those are budgeted where the sweep wraps them.
+    with no_retrace(allowed=2 * len(shapes),
+                    counters={"train.loop": TRACE_COUNTS}, label="fit"):
+        for ep in range(start_epoch, tc.epochs):
+            t0 = time.perf_counter()
+            order = np.arange(len(buckets), dtype=np.int64)
+            if tc.shuffle:
+                # derived from the state's root RNG key by *absolute* epoch
+                # (fold_in, not sequential draws), so a resumed run replays
+                # the identical bucket walk — part of the bitwise guarantee
+                order = np.asarray(jax.random.permutation(
+                    jax.random.fold_in(rng, ep), len(buckets)))
+            outs_all, weights = [], []
+            for bi in order:
+                b = buckets[int(bi)]
+                params, opt, outs = step_fn(params, opt, b.arrays)
+                outs = np.asarray(outs)
+                check_finite(f"train step outs (epoch {ep})", outs)
+                outs_all.append(outs)
+                # per_sim: one row per sim; batch: one bucket-mean row
+                weights.append(np.full(len(outs), b.size / len(outs),
+                                       np.float64))
+            outs = np.concatenate(outs_all)
+            w = np.concatenate(weights)
+            mean = (outs * w[:, None]).sum(0) / w.sum()
+            entry = {"epoch": ep, "loss": float(mean[0]),
+                     "sldn": float(mean[1]), "size": float(mean[2]),
+                     "queue": float(mean[3]), "lr": float(outs[-1, 4]),
+                     "grad_norm": float(mean[5]),
+                     "wall_s": round(time.perf_counter() - t0, 3)}
+            if eval_fn is not None and eval_every and \
+                    ((ep + 1) % eval_every == 0 or ep + 1 == tc.epochs):
+                entry["eval"] = eval_fn(params)
+            history.append(entry)
+            log(f"[train] epoch {ep}: loss={entry['loss']:.4f} "
+                f"(sldn={entry['sldn']:.4f} size={entry['size']:.4f} "
+                f"queue={entry['queue']:.4f}) lr={entry['lr']:.2e} "
+                f"{entry['wall_s']:.1f}s")
+            if tc.ckpt_dir and ((ep + 1) % tc.ckpt_every == 0
+                                or ep + 1 == tc.epochs):
+                tree = {"params": params, "opt": opt, "rng": rng}
+                ckpt.save(tc.ckpt_dir, ep + 1, tree, keep_last=tc.keep_last)
+                _write_history(tc.ckpt_dir, history)
+                # test hook: deterministic "kill" right after a checkpoint
+                # commits — os._exit skips every cleanup path, so the
+                # resume test exercises exactly what a SIGKILL mid-run
+                # leaves behind
+                if os.environ.get("REPRO_TRAIN_ABORT_AFTER_EPOCH") \
+                        == str(ep + 1):
+                    os._exit(17)
 
     return TrainState(params=params, opt=opt, rng=rng), history
 

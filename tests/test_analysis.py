@@ -1,0 +1,353 @@
+"""repro.analysis + repro.runtime.guards: per-checker known-bad/known-good
+fixtures (including a reconstruction of the PR 3 waterfill tracer leak),
+pragma suppression, baseline round-trip, the repo-wide zero-unbaselined
+gate CI runs, and the runtime guards (no_retrace budgets, REPRO_CHECK_FINITE
+NaN/Inf checks at the SweepRunner adoption site)."""
+import json
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.analysis import (analyze_paths, analyze_source, load_baseline,
+                            partition, save_baseline, unjustified)
+from repro.analysis.checkers import (FingerprintCoverageChecker,
+                                     ModuleSource)
+from repro.analysis.__main__ import main as cli_main
+from repro.runtime.guards import (NonFiniteError, RetraceError, check_finite,
+                                  check_result_finite, no_retrace,
+                                  trace_total)
+
+CORE = "src/repro/core/fixture.py"       # path inside the hot/arena prefixes
+COLD = "src/repro/report/fixture.py"     # path outside them
+
+
+def names(findings, checker=None):
+    return [f.checker for f in findings
+            if checker is None or f.checker == checker]
+
+
+def src(code):
+    return textwrap.dedent(code)
+
+
+# ---------------------------------------------------------------- tracer-leak
+WATERFILL_LEAK = src("""
+    import jax.numpy as jnp
+
+    INF = jnp.asarray(3.4e38)    # the PR 3 bug: module constant built by jnp
+
+    def waterfill(a, cap, active):
+        return jnp.where(active, cap, INF)
+""")
+
+
+def test_tracer_leak_waterfill_reconstruction():
+    found = analyze_source(WATERFILL_LEAK, CORE)
+    assert "tracer-leak" in names(found)
+
+
+def test_tracer_leak_known_good_scalar_constant():
+    ok = WATERFILL_LEAK.replace("jnp.asarray(3.4e38)", "3.4e38")
+    assert "tracer-leak" not in names(analyze_source(ok, CORE))
+
+
+def test_tracer_leak_in_default_arg_and_not_in_body():
+    bad = src("""
+        import jax.numpy as jnp
+        def f(x=jnp.zeros(3)):          # defaults evaluate at import time
+            return x
+    """)
+    good = src("""
+        import jax.numpy as jnp
+        def f():
+            return jnp.zeros(3)          # built at call time: fine
+    """)
+    assert names(analyze_source(bad, COLD)) == ["tracer-leak"]
+    assert "tracer-leak" not in names(analyze_source(good, COLD))
+
+
+def test_repo_waterfill_ref_stays_clean():
+    # the actual PR 3 fix site must keep passing its own checker
+    found = analyze_paths(["src/repro/kernels/waterfill/ref.py"])
+    assert "tracer-leak" not in names(found)
+
+
+def test_pragma_suppresses_on_line_and_above():
+    same_line = src("""
+        import jax.numpy as jnp
+        K = jnp.zeros(3)  # lint-jax: disable=tracer-leak
+    """)
+    line_above = src("""
+        import jax.numpy as jnp
+        # lint-jax: disable=tracer-leak
+        K = jnp.zeros(3)
+    """)
+    wrong_checker = src("""
+        import jax.numpy as jnp
+        K = jnp.zeros(3)  # lint-jax: disable=host-sync
+    """)
+    assert not analyze_source(same_line, COLD)
+    assert not analyze_source(line_above, COLD)
+    assert names(analyze_source(wrong_checker, COLD)) == ["tracer-leak"]
+
+
+# ------------------------------------------------------------- retrace-hazard
+def test_retrace_jit_in_loop():
+    bad = src("""
+        import jax
+        def sweep(xs, f):
+            out = []
+            for x in xs:
+                out.append(jax.jit(f)(x))   # fresh compile cache per iter
+            return out
+    """)
+    good = src("""
+        import jax
+        def sweep(xs, f):
+            jf = jax.jit(f)
+            return [jf(x) for x in xs]
+    """)
+    assert "retrace-hazard" in names(analyze_source(bad, COLD))
+    assert "retrace-hazard" not in names(analyze_source(good, COLD))
+
+
+def test_retrace_branch_on_traced_param():
+    bad = src("""
+        import jax
+        @jax.jit
+        def f(x, n):
+            if n > 0:                       # traced value in Python `if`
+                return x
+            return -x
+    """)
+    static = bad.replace("@jax.jit",
+                         "from functools import partial\n"
+                         "@partial(jax.jit, static_argnames=('n',))")
+    none_check = src("""
+        import jax
+        @jax.jit
+        def f(x, n=None):
+            if n is None:                   # concretizes fine
+                return x
+            return x * 2
+    """)
+    assert "retrace-hazard" in names(analyze_source(bad, COLD))
+    assert "retrace-hazard" not in names(analyze_source(static, COLD))
+    assert "retrace-hazard" not in names(analyze_source(none_check, COLD))
+
+
+# ------------------------------------------------------------------ host-sync
+def test_host_sync_in_scan_body_any_path():
+    bad = src("""
+        import jax
+        import jax.lax as lax
+        def run(xs):
+            def body(c, x):
+                return c + x.item(), None   # device pull mid-trace
+            return lax.scan(body, 0.0, xs)
+    """)
+    assert "host-sync" in names(analyze_source(bad, COLD))
+
+
+def test_host_sync_hot_path_indexed_pull():
+    bad = src("""
+        def step(self, t, fid):
+            self.fcts[fid] = t - float(self.state["t_arr"][fid])
+    """)
+    assert "host-sync" in names(analyze_source(bad, CORE))
+    # same code outside the hot-path packages: untraced, unflagged
+    assert "host-sync" not in names(analyze_source(bad, COLD))
+
+
+def test_host_sync_repo_defect_stays_fixed():
+    # the real defect this PR fixed: a per-departure device pull in
+    # M4Simulator.commit_departure (core/simulate.py) — must not return
+    found = analyze_paths(["src/repro/core/simulate.py"])
+    assert "host-sync" not in names(found)
+
+
+# ---------------------------------------------------------------- dtype-drift
+def test_dtype_drift_scoped_to_arena_packages():
+    bad = src("""
+        import jax.numpy as jnp
+        def arena(N):
+            return jnp.zeros((N,))
+    """)
+    good = bad.replace("jnp.zeros((N,))", "jnp.zeros((N,), jnp.float32)")
+    positional = src("""
+        import numpy as np
+        def arena(N):
+            return np.full(N, 8.0, np.float64)   # dtype positionally: fine
+    """)
+    assert names(analyze_source(bad, CORE)) == ["dtype-drift"]
+    assert not analyze_source(good, CORE)
+    assert not analyze_source(positional, CORE)
+    assert not analyze_source(bad, COLD)          # out of scope
+
+
+# ------------------------------------------------------------ donation-misuse
+def test_donation_read_after_donate():
+    bad = src("""
+        import jax
+        step = jax.jit(lambda p, s: s, donate_argnums=(1,))
+        def drive(p, state):
+            out = step(p, state)
+            return state.sum()              # donated buffer read back
+    """)
+    rebound = src("""
+        import jax
+        step = jax.jit(lambda p, s: s, donate_argnums=(1,))
+        def drive(p, state):
+            state = step(p, state)          # the M4Simulator pattern
+            return state.sum()
+    """)
+    assert "donation-misuse" in names(analyze_source(bad, COLD))
+    assert "donation-misuse" not in names(analyze_source(rebound, COLD))
+
+
+# ------------------------------------------------------- fingerprint-coverage
+FP_FIXTURE = src("""
+    from dataclasses import dataclass
+
+    @dataclass(frozen=True)
+    class SimRequest:
+        seed: int = 0
+        record_events: bool = False
+
+        def content_hash(self):
+            return str(self.seed)           # record_events not reflected
+""")
+
+
+def project_findings(text, path="src/repro/sim/fixture.py"):
+    checker = FingerprintCoverageChecker()
+    return list(checker.check_project([ModuleSource.parse(text, path)]))
+
+
+def test_fingerprint_coverage_flags_missing_field():
+    found = project_findings(FP_FIXTURE)
+    assert ["record_events"] == [f.source.split(":")[0].strip()
+                                 for f in found]
+
+
+def test_fingerprint_coverage_wholesale_and_full_reference():
+    covered = FP_FIXTURE.replace("str(self.seed)",
+                                 "str((self.seed, self.record_events))")
+    wholesale = FP_FIXTURE.replace("str(self.seed)", "repr(request)")
+    assert not project_findings(covered)
+    assert not project_findings(wholesale)
+
+
+# ----------------------------------------------------------- baseline + gate
+def test_baseline_roundtrip(tmp_path):
+    findings = analyze_source(WATERFILL_LEAK, CORE)
+    assert findings
+    path = str(tmp_path / "baseline.json")
+    save_baseline(path, findings, justifications={})
+    baseline = load_baseline(path)
+    new, known, stale = partition(findings, baseline)
+    assert not new and len(known) == len(findings)
+    # fresh entries carry the TODO marker --check refuses
+    assert len(unjustified(baseline)) == len(findings)
+    save_baseline(path, findings,
+                  justifications={f.fingerprint: "known, deliberate"
+                                  for f in findings})
+    assert not unjustified(load_baseline(path))
+    # fixing the code strands the entry as stale (reported, non-fatal)
+    _, _, stale = partition([], load_baseline(path))
+    assert len(stale) == len(findings)
+
+
+def test_baseline_fingerprint_survives_line_moves():
+    a = analyze_source(WATERFILL_LEAK, CORE)
+    moved = analyze_source("# a new leading comment\n" + WATERFILL_LEAK, CORE)
+    assert [f.fingerprint for f in a] == [f.fingerprint for f in moved]
+    assert [f.line for f in a] != [f.line for f in moved]
+
+
+def test_repo_is_clean_against_committed_baseline():
+    """The CI gate: zero unbaselined findings, every entry justified."""
+    findings = analyze_paths()
+    from repro.analysis import DEFAULT_BASELINE, REPO_ROOT
+    import os
+    baseline = load_baseline(os.path.join(REPO_ROOT, DEFAULT_BASELINE))
+    new, _, _ = partition(findings, baseline)
+    assert not new, "\n".join(f.render() for f in new)
+    assert not unjustified(baseline)
+
+
+def test_cli_check_fails_on_known_bad_file(tmp_path):
+    bad = tmp_path / "bad.py"
+    bad.write_text(WATERFILL_LEAK)
+    assert cli_main([str(bad), "--baseline", "", "--check"]) == 1
+    bad.write_text(WATERFILL_LEAK.replace("jnp.asarray(3.4e38)", "3.4e38"))
+    assert cli_main([str(bad), "--baseline", "", "--check"]) == 0
+
+
+def test_cli_check_passes_on_repo():
+    assert cli_main(["--check"]) == 0
+
+
+# ------------------------------------------------------------- runtime guards
+def test_no_retrace_budget():
+    fam = {"step": 0}
+    with no_retrace(allowed=2, counters={"train.loop": fam}):
+        fam["step"] += 2                      # within budget
+    with pytest.raises(RetraceError, match=r"train\.loop\.step: \+3"):
+        with no_retrace(allowed=2, counters={"train.loop": fam},
+                        label="epoch"):
+            fam["step"] += 3
+
+
+def test_trace_total_counts_all_families():
+    assert trace_total({"a": {"x": 2}, "b": {"y": 3}}) == 5
+    assert isinstance(trace_total(), int)     # default: the repo's counters
+
+
+def test_check_finite_gated_by_env(monkeypatch):
+    tree = {"w": np.array([1.0, np.inf])}
+    monkeypatch.delenv("REPRO_CHECK_FINITE", raising=False)
+    check_finite("off", tree)                 # disabled: free no-op
+    monkeypatch.setenv("REPRO_CHECK_FINITE", "1")
+    with pytest.raises(NonFiniteError, match="off-by-default"):
+        check_finite("off-by-default", tree)
+    check_finite("nan ok", {"w": np.array([np.nan])}, allow_nan=True)
+
+
+def test_check_result_finite_semantics(monkeypatch):
+    monkeypatch.setenv("REPRO_CHECK_FINITE", "1")
+    from repro.sim import SimResult
+    partial_nan = SimResult(fcts=np.array([1.0, np.nan]),
+                            slowdowns=np.array([1.0, np.nan]), wall_time=0.0)
+    check_result_finite("ok", partial_nan)    # unfinished flows are legal
+    for bad in (SimResult(fcts=np.array([np.inf]),
+                          slowdowns=np.array([1.0]), wall_time=0.0),
+                SimResult(fcts=np.array([np.nan, np.nan]),
+                          slowdowns=np.array([np.nan, np.nan]),
+                          wall_time=0.0)):
+        with pytest.raises(NonFiniteError):
+            check_result_finite("bad", bad)
+
+
+def test_sweep_runner_finite_smoke(monkeypatch):
+    """Adoption-site smoke: a backend emitting Inf FCTs trips the runner's
+    finite check when REPRO_CHECK_FINITE=1 and passes silently when off."""
+    from repro.scenarios import ScenarioSpec, SweepRunner
+    from repro.sim import SimResult
+
+    class InfBackend:
+        name = "inf"
+
+        def run_chunked(self, requests, chunk_size=None):
+            return [SimResult(fcts=np.full(r.num_flows, np.inf),
+                              slowdowns=np.full(r.num_flows, np.inf),
+                              wall_time=0.0, backend=self.name)
+                    for r in requests]
+
+    specs = [ScenarioSpec(name="s0", num_flows=4)]
+    monkeypatch.delenv("REPRO_CHECK_FINITE", raising=False)
+    SweepRunner(InfBackend()).run(specs)
+    monkeypatch.setenv("REPRO_CHECK_FINITE", "1")
+    with pytest.raises(NonFiniteError, match="inf:s0"):
+        SweepRunner(InfBackend()).run(specs)

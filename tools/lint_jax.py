@@ -1,0 +1,17 @@
+#!/usr/bin/env python
+"""Entry point for the JAX-aware static analyzer (repro.analysis).
+
+Equivalent to `PYTHONPATH=src python -m repro.analysis`; this wrapper
+just fixes sys.path so CI and pre-commit hooks can call it from the repo
+root without environment setup. See docs/ANALYSIS.md.
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                os.pardir, "src"))
+
+from repro.analysis.__main__ import main  # noqa: E402
+
+if __name__ == "__main__":
+    sys.exit(main())
