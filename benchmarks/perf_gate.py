@@ -4,10 +4,13 @@ Measures the m4 open-loop event scan (production incremental path AND the
 seed program preserved behind ``snapshot_impl="dense"`` — the
 "current-main" baseline the speedup is claimed against) and the
 flowsim_fast event scan, at arena sizes N in {256, 1024, 4096} on
-proportionally grown fat-trees. Results land in ``BENCH_m4.json`` and
-``BENCH_flowsim_fast.json`` at the repo root; committing them gives the
-repo a perf trajectory, and the CI job replays ``--check`` against the
-committed files.
+proportionally grown fat-trees, plus the end-to-end throughput of the
+`repro.serve` dynamic-batching service (``measure_serve``). Results land
+in ``BENCH_m4.json``, ``BENCH_flowsim_fast.json``, and
+``BENCH_serve.json`` at the repo root; committing them gives the repo a
+perf trajectory, and the CI job replays ``--check`` against the
+committed files (``--only serve`` runs just the service benchmark, as
+the CI serve-smoke job does).
 
 Methodology
 -----------
@@ -168,6 +171,116 @@ def measure_flowsim_fast(sizes=GATE_SIZES, events=256, reps=3, log=print):
             "entries": entries}
 
 
+def measure_serve(reps=3, log=print):
+    """End-to-end SimService throughput: a 32-request shape-diverse
+    concurrent workload (2 shape buckets, 4 client threads) through the
+    dynamic-batching service, cold then warm.
+
+    The cold pass pays simulation + up to one XLA compile per shape
+    bucket; warm passes are pure content-hash cache hits. Structural
+    facts (compiles, hit rate, failures) gate cross-host; requests/sec
+    gates same-host only, like the other benchmarks."""
+    import shutil
+    import tempfile
+    import threading
+
+    from repro.scenarios.spec import ScenarioSpec
+    from repro.serve import ServeConfig, SimService
+    from repro.sim import get_backend
+
+    n_reqs, n_threads, batch = 32, 4, 8
+    reqs = [ScenarioSpec(topo="ft-8x4x2", num_flows=192 + 64 * (i % 2),
+                         seed=i, max_load=0.5).to_request()
+            for i in range(n_reqs)]
+    cache_dir = tempfile.mkdtemp(prefix="bench_serve_")
+    try:
+        with SimService(get_backend("flowsim_fast"), cache_dir=cache_dir,
+                        config=ServeConfig(batch_size=batch,
+                                           flush_interval_s=0.02)) as svc:
+
+            def drive():
+                futs = []
+
+                def client(lo):
+                    for i in range(lo, n_reqs, n_threads):
+                        futs.append(svc.submit(reqs[i]))
+                threads = [threading.Thread(target=client, args=(lo,))
+                           for lo in range(n_threads)]
+                for t in threads:
+                    t.start()
+                for t in threads:
+                    t.join()
+                for f in futs:
+                    f.result(timeout=600)
+
+            t0 = time.perf_counter()
+            drive()
+            cold_rps = n_reqs / (time.perf_counter() - t0)
+            warm_rps = 0.0
+            for _ in range(reps):
+                t0 = time.perf_counter()
+                drive()
+                warm_rps = max(warm_rps, n_reqs / (time.perf_counter() - t0))
+            m = svc.metrics()
+    finally:
+        shutil.rmtree(cache_dir, ignore_errors=True)
+
+    e = {"n": n_reqs,
+         "cold_requests_per_sec": round(cold_rps, 1),
+         "warm_requests_per_sec": round(warm_rps, 1),
+         "compiles": m["compiles"],
+         "batch_occupancy": m["batch_occupancy"],
+         "queue_delay_p50_ms": m["queue_delay_p50_ms"],
+         "queue_delay_p99_ms": m["queue_delay_p99_ms"],
+         "warm_hit_rate": round(m["cache_hits"] / (reps * n_reqs), 4),
+         "failed": m["failed"] + m["rejected"] + m["timed_out"]}
+    log(f"[serve] {n_reqs} reqs x {n_threads} threads: "
+        f"cold={e['cold_requests_per_sec']:.1f} rps  "
+        f"warm={e['warm_requests_per_sec']:.0f} rps  "
+        f"compiles={e['compiles']}  "
+        f"p99 delay={e['queue_delay_p99_ms']:.1f}ms")
+    return {"benchmark": "serve",
+            "workload": {"requests": n_reqs, "threads": n_threads,
+                         "shape_buckets": 2, "batch_size": batch,
+                         "warm_passes": reps},
+            "entries": [e]}
+
+
+def check_serve(report, baseline, tolerance=0.2, log=print):
+    """Serve gate: structural facts everywhere, throughput same-host.
+
+    Cross-host gates — more XLA compiles than the committed run (a
+    retrace crept into the batching path), a warm pass that is not 100%
+    cache hits, or any failed/rejected/timed-out request. Requests/sec
+    is gated at 2x tolerance only on hostname match, like the absolute
+    rates in the other benchmarks."""
+    failures = []
+    same_host = baseline.get("host", {}).get("hostname") == \
+        socket.gethostname()
+    e = report["entries"][0]
+    b = baseline["entries"][0]
+    if e["compiles"] > b["compiles"]:
+        failures.append(f"serve: {e['compiles']} compiles > baseline "
+                        f"{b['compiles']} (retrace in the batching path)")
+    if e["warm_hit_rate"] < 1.0:
+        failures.append(f"serve: warm hit rate {e['warm_hit_rate']:.2%} "
+                        "< 100%")
+    if e["failed"] > 0:
+        failures.append(f"serve: {e['failed']} requests "
+                        "failed/rejected/timed out")
+    abs_tol = min(1.0, 2 * tolerance)
+    for k in ("cold_requests_per_sec", "warm_requests_per_sec"):
+        lim = b[k] * (1 - abs_tol)
+        if e[k] < lim:
+            msg = (f"serve {k}: {e[k]:.1f} < {lim:.1f} "
+                   f"(baseline {b[k]:.1f} - {abs_tol:.0%})")
+            if same_host:
+                failures.append(msg)
+            else:
+                log(f"[warn, different host — not gated] {msg}")
+    return failures
+
+
 def _cfg_dict(cfg):
     import dataclasses
     return {f.name: getattr(cfg, f.name) for f in dataclasses.fields(cfg)}
@@ -239,13 +352,25 @@ def main(argv=None):
                     help="allowed fractional regression (default 0.2)")
     ap.add_argument("--out-dir", default=REPO_ROOT,
                     help="where BENCH_*.json live")
+    ap.add_argument("--only", default="",
+                    help="comma-separated subset of benchmarks to run "
+                         "(m4, flowsim_fast, serve; default: all)")
     args = ap.parse_args(argv)
 
-    reports = {
-        "BENCH_m4.json": measure_m4(events=args.events, reps=args.reps),
-        "BENCH_flowsim_fast.json": measure_flowsim_fast(
-            events=max(32, args.events // 2), reps=args.reps),
+    benches = {
+        "BENCH_m4.json": ("m4", lambda: measure_m4(
+            events=args.events, reps=args.reps)),
+        "BENCH_flowsim_fast.json": ("flowsim_fast", lambda:
+            measure_flowsim_fast(events=max(32, args.events // 2),
+                                 reps=args.reps)),
+        "BENCH_serve.json": ("serve", lambda: measure_serve(reps=args.reps)),
     }
+    only = {s for s in args.only.split(",") if s}
+    unknown = only - {name for name, _ in benches.values()}
+    if unknown:
+        ap.error(f"unknown benchmark(s) {sorted(unknown)}")
+    reports = {fname: fn() for fname, (name, fn) in benches.items()
+               if not only or name in only}
     failures = []
     for fname, report in reports.items():
         report["host"] = _host_info()
@@ -257,7 +382,8 @@ def main(argv=None):
                 continue
             with open(path) as fh:
                 baseline = json.load(fh)
-            failures += check(report, baseline, args.tolerance)
+            checker = check_serve if report["benchmark"] == "serve" else check
+            failures += checker(report, baseline, args.tolerance)
         else:
             with open(path, "w") as fh:
                 json.dump(report, fh, indent=2, sort_keys=True)

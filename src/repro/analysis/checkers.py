@@ -344,7 +344,7 @@ class HostSyncChecker(Checker):
     lax.scan/while_loop/vmap/...) a host pull is a trace-time error or a
     silent constant-folding bug, so `.item()/.tolist()/float()/int()/np.*`
     calls there are flagged everywhere. In the hot-path packages
-    (configured via `hot_prefixes`, default core/ kernels/ sim/) even
+    (configured via `hot_prefixes`, default core/ kernels/ sim/ serve/) even
     *untraced* per-event pulls are flagged — PR 3's `next_departure` work
     existed precisely because one `(N,)` host pull per event dominated the
     closed-loop budget.
@@ -355,7 +355,8 @@ class HostSyncChecker(Checker):
                    "even outside it")
 
     def __init__(self, hot_prefixes: Sequence[str] = (
-            "src/repro/core/", "src/repro/kernels/", "src/repro/sim/")):
+            "src/repro/core/", "src/repro/kernels/", "src/repro/sim/",
+            "src/repro/serve/")):
         self.hot_prefixes = tuple(hot_prefixes)
 
     def check(self, mod: ModuleSource) -> Iterator[Finding]:
@@ -463,7 +464,8 @@ class DtypeDriftChecker(Checker):
 
     def __init__(self, prefixes: Sequence[str] = (
             "src/repro/core/", "src/repro/kernels/", "src/repro/train/",
-            "src/repro/launch/", "src/repro/models/")):
+            "src/repro/launch/", "src/repro/models/",
+            "src/repro/serve/")):
         self.prefixes = tuple(prefixes)
 
     def check(self, mod: ModuleSource) -> Iterator[Finding]:

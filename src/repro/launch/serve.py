@@ -1,77 +1,29 @@
-"""Batched serving driver: prefill + decode loop with a KV/SSM state arena.
+"""Deprecated: the LM token-serving scaffold that used to live here was
+dead code inherited from the repo template — this project simulates
+networks, not language models, and nothing imported it.
 
-  PYTHONPATH=src python -m repro.launch.serve --arch mamba2-1.3b --smoke \
-      --batch 4 --prompt-len 16 --gen 32
+The real serving layer is `repro.serve` (docs/SERVING.md): an always-on
+simulation service with dynamic batching, backpressure, and an HTTP
+front-end.
+
+    PYTHONPATH=src python -m repro.serve --backend flowsim_fast
 """
 from __future__ import annotations
 
-import argparse
-import time
+import sys
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from .. import configs
-from ..models import lm
-
-
-def serve(cfg, *, batch=4, prompt_len=16, gen=32, seed=0, log=print):
-    params = lm.init_params(jax.random.PRNGKey(seed), cfg)
-    rng = np.random.default_rng(seed)
-    prompts = rng.integers(0, cfg.vocab, (batch, prompt_len)).astype(np.int32)
-
-    state = lm.init_decode_state(cfg, batch, prompt_len + gen)
-    step = jax.jit(lambda p, s, b: lm.serve_step(p, cfg, s, b))
-
-    # prefill via decode steps (correct, simple; prod would batch-prefill)
-    t0 = time.perf_counter()
-    for t in range(prompt_len):
-        b = {"tokens": jnp.asarray(prompts[:, t:t + 1])}
-        if cfg.frontend != "none":
-            b = {"embeds": jax.random.normal(
-                jax.random.fold_in(jax.random.PRNGKey(seed), t),
-                (batch, 1, cfg.d_model), cfg.dtype)}
-        if cfg.mrope_sections:
-            b["positions"] = jnp.full((3, batch, 1), t, jnp.int32)
-        state, logits = step(params, state, b)
-    log(f"[serve] prefill {prompt_len} steps: {time.perf_counter()-t0:.1f}s")
-
-    out = []
-    t0 = time.perf_counter()
-    tok = jnp.argmax(logits, -1)[:, None]
-    for t in range(gen):
-        b = {"tokens": tok}
-        if cfg.frontend != "none":
-            b = {"embeds": jax.random.normal(
-                jax.random.fold_in(jax.random.PRNGKey(seed + 1), t),
-                (batch, 1, cfg.d_model), cfg.dtype)}
-        if cfg.mrope_sections:
-            b["positions"] = jnp.full((3, batch, 1), prompt_len + t, jnp.int32)
-        state, logits = step(params, state, b)
-        tok = jnp.argmax(logits, -1)[:, None]
-        out.append(np.asarray(tok))
-    dt = time.perf_counter() - t0
-    log(f"[serve] decoded {gen} x {batch} tokens in {dt:.1f}s "
-        f"({gen*batch/dt:.1f} tok/s)")
-    return np.concatenate(out, 1)
+_MESSAGE = (
+    "repro.launch.serve is deprecated and does nothing: the LM serving "
+    "scaffold was removed. Use the simulation service instead:\n"
+    "    PYTHONPATH=src python -m repro.serve --backend flowsim_fast\n"
+    "See docs/SERVING.md."
+)
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=16)
-    ap.add_argument("--gen", type=int, default=32)
-    args = ap.parse_args()
-    cfg = configs.get_config(args.arch)
-    if args.smoke:
-        cfg = configs.reduce_for_smoke(cfg)
-    toks = serve(cfg, batch=args.batch, prompt_len=args.prompt_len,
-                 gen=args.gen)
-    print(f"[serve] sample tokens: {toks[0][:16].tolist()}")
+def main() -> int:
+    print(_MESSAGE, file=sys.stderr)
+    return 2
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

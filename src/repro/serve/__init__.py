@@ -1,0 +1,27 @@
+"""repro.serve — always-on simulation service with dynamic batching.
+
+The serving layer over `repro.sim`: a thread-safe `SimService` that
+answers cache hits instantly from the content-hash result cache,
+coalesces duplicate in-flight requests, batches misses into
+shape-bucketed `run_many` flushes on a deadline, applies bounded-queue
+backpressure, and drains cleanly on shutdown — plus a stdlib HTTP
+front-end for out-of-process clients and a metrics block with p50/p99
+queue delay. See docs/SERVING.md and DESIGN.md §11; CLI:
+
+    PYTHONPATH=src python -m repro.serve --backend flowsim_fast --port 8642
+    PYTHONPATH=src python -m repro.serve --smoke
+"""
+from .clock import Clock, ManualClock, MonotonicClock
+from .http import (ServeClient, SimHTTPServer, request_from_wire,
+                   start_http_server)
+from .metrics import ServiceMetrics, merge_snapshots
+from .service import (RequestTimeout, ServeConfig, ServiceClosed,
+                      ServiceOverloaded, SimService)
+
+__all__ = [
+    "SimService", "ServeConfig", "ServiceMetrics", "merge_snapshots",
+    "ServiceOverloaded", "ServiceClosed", "RequestTimeout",
+    "Clock", "ManualClock", "MonotonicClock",
+    "SimHTTPServer", "ServeClient", "start_http_server",
+    "request_from_wire",
+]

@@ -1,0 +1,97 @@
+"""Thread-safe service counters + queue-delay percentiles.
+
+What the serving layer must be able to answer about itself (the Scalable
+Tail Latency Estimation paper's bar — tails, not just means): how much
+traffic it absorbed (QPS), how much the content-hash cache deflected
+(hit rate), how full the batches ran (occupancy — padding waste is the
+price of compile stability), how many XLA compiles the whole service
+lifetime cost, and the p50/p99 of the time requests spent queued waiting
+for a flush. Queue delays land in a bounded ring so an always-on process
+never grows; percentiles are computed over the retained window.
+"""
+from __future__ import annotations
+
+import threading
+from collections import deque
+from typing import Dict, Optional
+
+import numpy as np
+
+# counters every lane maintains; snapshot() reports them all, zero-filled
+COUNTERS = ("submitted", "completed", "failed", "rejected", "timed_out",
+            "cancelled", "cache_hits", "coalesced", "batches",
+            "batched_requests", "padded_requests", "isolated_retries")
+
+
+class ServiceMetrics:
+    """Counter block + queue-delay reservoir for one dispatch lane."""
+
+    def __init__(self, clock, delay_window: int = 4096):
+        self._clock = clock
+        self._lock = threading.Lock()
+        self._counts: Dict[str, int] = {k: 0 for k in COUNTERS}
+        self._delays = deque(maxlen=delay_window)
+        self._started = clock.now()
+
+    def count(self, name: str, n: int = 1):
+        with self._lock:
+            self._counts[name] = self._counts.get(name, 0) + n
+
+    def observe_queue_delay(self, seconds: float):
+        with self._lock:
+            self._delays.append(float(seconds))
+
+    def snapshot(self, compiles: Optional[int] = None) -> dict:
+        """One JSON-able dict: counters + derived rates + delay tails."""
+        with self._lock:
+            counts = dict(self._counts)
+            delays = list(self._delays)
+            elapsed = max(self._clock.now() - self._started, 1e-9)
+        out = dict(counts)
+        out["uptime_s"] = elapsed
+        out["qps"] = counts["completed"] / elapsed
+        out["cache_hit_rate"] = (
+            counts["cache_hits"] / counts["submitted"]
+            if counts["submitted"] else 0.0)
+        out["batch_occupancy"] = (
+            counts["batched_requests"] /
+            (counts["batched_requests"] + counts["padded_requests"])
+            if counts["batched_requests"] else 0.0)
+        if delays:
+            arr = np.asarray(delays, dtype=np.float64)
+            out["queue_delay_p50_ms"] = float(np.percentile(arr, 50)) * 1e3
+            out["queue_delay_p99_ms"] = float(np.percentile(arr, 99)) * 1e3
+            out["queue_delay_mean_ms"] = float(arr.mean()) * 1e3
+        else:
+            out["queue_delay_p50_ms"] = 0.0
+            out["queue_delay_p99_ms"] = 0.0
+            out["queue_delay_mean_ms"] = 0.0
+        if compiles is not None:
+            out["compiles"] = compiles
+        return out
+
+
+def merge_snapshots(per_lane: Dict[str, dict]) -> dict:
+    """Aggregate lane snapshots into one service-level block (counters
+    sum; rates and tails recomputed from the sums where possible, delay
+    percentiles conservatively take the max across lanes)."""
+    agg: dict = {k: 0 for k in COUNTERS}
+    for snap in per_lane.values():
+        for k in COUNTERS:
+            agg[k] += snap.get(k, 0)
+    agg["uptime_s"] = max((s.get("uptime_s", 0.0)
+                           for s in per_lane.values()), default=0.0)
+    agg["qps"] = sum(s.get("qps", 0.0) for s in per_lane.values())
+    agg["cache_hit_rate"] = (agg["cache_hits"] / agg["submitted"]
+                             if agg["submitted"] else 0.0)
+    agg["batch_occupancy"] = (
+        agg["batched_requests"] /
+        (agg["batched_requests"] + agg["padded_requests"])
+        if agg["batched_requests"] else 0.0)
+    for q in ("queue_delay_p50_ms", "queue_delay_p99_ms",
+              "queue_delay_mean_ms"):
+        agg[q] = max((s.get(q, 0.0) for s in per_lane.values()), default=0.0)
+    compiles = [s["compiles"] for s in per_lane.values() if "compiles" in s]
+    if compiles:
+        agg["compiles"] = max(compiles)
+    return agg
