@@ -1,0 +1,188 @@
+"""Fleet job types: what one claimed chunk actually *does*.
+
+A `FleetJob` is a picklable strategy object shipped to every spawned
+worker once; each claimed task hands it a small payload (a chunk of
+scenario specs, or one dataset shard spec). The contract that makes the
+whole fleet crash-safe:
+
+- `run(payload)` writes results **only** through the content-addressed
+  blobstore (`ResultCache` / `DatasetStore`): atomic, idempotent,
+  keyed by content. Two workers racing the same chunk (a broken lease)
+  just write identical bytes twice.
+- `verify(payload)` re-reads every result key through the store's
+  integrity-checked `get` and returns the keys that are missing or
+  corrupt — the worker retries (raising a retryable IOError) and the
+  supervisor re-verifies behind done markers, so a torn or bit-flipped
+  blob heals instead of surviving into a consumer.
+- `result_paths(payload)` names the blob files a task writes (the chaos
+  harness corrupts these; nothing else uses it).
+
+Module import stays jax-free; jobs that need jax (the m4 backend) or the
+packet DES import lazily inside `run`, so a flowsim fleet worker never
+pays XLA startup.
+"""
+from __future__ import annotations
+
+import hashlib
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+Task = Tuple[str, dict]     # (task_id, payload)
+
+
+def _numpyify(tree):
+    """Recursively convert array leaves to numpy so a jax params pytree
+    pickles into spawn workers without dragging device buffers along."""
+    import numpy as np
+    if isinstance(tree, dict):
+        return {k: _numpyify(v) for k, v in tree.items()}
+    if isinstance(tree, (list, tuple)):
+        return type(tree)(_numpyify(v) for v in tree)
+    if hasattr(tree, "__array__"):
+        return np.asarray(tree)
+    return tree
+
+
+class FleetJob:
+    """Base strategy: subclasses define the three methods below and must
+    be picklable (spawn start method ships them to workers by value)."""
+
+    def run(self, payload: dict) -> None:
+        """Compute the task and persist results through the blobstore."""
+        raise NotImplementedError
+
+    def verify(self, payload: dict) -> List[str]:
+        """Result keys of `payload` that are missing/unreadable on disk."""
+        raise NotImplementedError
+
+    def result_paths(self, payload: dict) -> List[str]:
+        """Blob file paths this task writes (chaos corruption targets)."""
+        raise NotImplementedError
+
+
+# ------------------------------------------------------------------ sweeps
+@dataclass
+class SweepJob(FleetJob):
+    """One task = one shape-compatible chunk of a scenario sweep.
+
+    The payload carries the chunk's specs *and* their precomputed result
+    keys (`result_key(request, backend)` — computed once by the
+    dispatcher, where the backend object exists). The worker rebuilds
+    the backend from `backend_name` + `backend_kwargs` on first use and
+    runs the chunk as a single `run_many` batch — the same one-compile
+    batching `Backend.run_chunked` does, so fleet and in-process sweeps
+    produce identical per-chunk results.
+    """
+    backend_name: str
+    cache_dir: str
+    backend_kwargs: Dict[str, Any] = field(default_factory=dict)
+    request_options: Dict[str, Any] = field(default_factory=dict)
+
+    def _backend(self):
+        be = getattr(self, "_backend_obj", None)
+        if be is None:
+            from ..sim import get_backend
+            be = get_backend(self.backend_name, **self.backend_kwargs)
+            self._backend_obj = be
+        return be
+
+    def _store(self):
+        from ..scenarios.cache import ResultCache
+        return ResultCache(self.cache_dir)
+
+    def run(self, payload: dict) -> None:
+        store = self._store()
+        requests = [s.to_request(**self.request_options)
+                    for s in payload["specs"]]
+        results = self._backend().run_many(requests)
+        for key, res in zip(payload["keys"], results):
+            store.put(key, res)
+
+    def verify(self, payload: dict) -> List[str]:
+        store = self._store()
+        return [k for k in payload["keys"] if store.get(k) is None]
+
+    def result_paths(self, payload: dict) -> List[str]:
+        store = self._store()
+        return [store._path(k) for k in payload["keys"]]
+
+
+def sweep_job_for(backend, cache_dir: str,
+                  request_options: Optional[dict] = None) -> SweepJob:
+    """Build a `SweepJob` from a live backend object.
+
+    Stateless backends ship as just their name; the m4 backend also
+    ships its parameters (numpy-ified — spawn workers rebuild it with
+    `get_backend("m4", params=..., cfg=...)` and, because `fingerprint`
+    hashes the weights, write to the exact same cache keys).
+    """
+    kwargs: Dict[str, Any] = {}
+    if backend.name == "m4":
+        kwargs = {"params": _numpyify(backend.params), "cfg": backend.cfg}
+    return SweepJob(backend_name=backend.name, cache_dir=cache_dir,
+                    backend_kwargs=kwargs,
+                    request_options=dict(request_options or {}))
+
+
+def sweep_tasks(specs: Sequence, requests: Sequence, keys: Sequence[str],
+                chunk_size: Optional[int]) -> List[Task]:
+    """Partition a sweep's cache misses into fleet tasks.
+
+    Replicates `Backend.run_chunked`'s arena-footprint sort — ascending
+    (num_flows, num_links), sliced into `chunk_size` chunks — so every
+    chunk pads to near-uniform shapes and a fleet run batches exactly
+    like an in-process `run_chunked` would. Task ids hash the chunk's
+    result keys: content-stable, so a relaunched fleet (or a different
+    worker count) maps the same work to the same lease/done markers.
+    """
+    order = sorted(range(len(requests)),
+                   key=lambda i: (requests[i].num_flows,
+                                  requests[i].topo.num_links))
+    size = chunk_size or len(order) or 1
+    tasks: List[Task] = []
+    for lo in range(0, len(order), size):
+        chunk = order[lo:lo + size]
+        chunk_keys = tuple(keys[i] for i in chunk)
+        task_id = hashlib.sha256("|".join(chunk_keys).encode()).hexdigest()
+        tasks.append((task_id, {
+            "specs": tuple(specs[i] for i in chunk),
+            "keys": chunk_keys,
+        }))
+    return tasks
+
+
+# ----------------------------------------------------------------- datasets
+@dataclass
+class DatasetJob(FleetJob):
+    """One task = one ground-truth dataset shard (packet DES + event
+    tensor assembly), persisted to the `DatasetStore`. Replaces the old
+    ad-hoc `mp.Pool` in `repro.train.data.build_dataset` so dataset
+    builds inherit retry/poison/straggler handling for free."""
+    root: str
+    m4cfg: Any                  # M4Config (picklable dataclass)
+    max_events: Optional[int] = None
+    request_seed: int = 0
+
+    def _store(self):
+        from ..train.data import DatasetStore
+        return DatasetStore(self.root)
+
+    def run(self, payload: dict) -> None:
+        from ..train.data import _build_one
+        batch = _build_one(payload["spec"], self.m4cfg,
+                           self.max_events, self.request_seed)
+        self._store().put(payload["key"], batch)
+
+    def verify(self, payload: dict) -> List[str]:
+        return [] if self._store().get(payload["key"]) is not None \
+            else [payload["key"]]
+
+    def result_paths(self, payload: dict) -> List[str]:
+        return [self._store()._path(payload["key"])]
+
+
+def dataset_tasks(specs: Sequence, keys: Sequence[str]) -> List[Task]:
+    """One fleet task per missing shard; the shard key is already a
+    content hash, so it doubles as the task id."""
+    return [(key, {"spec": spec, "key": key})
+            for spec, key in zip(specs, keys)]

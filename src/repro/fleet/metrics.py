@@ -1,0 +1,45 @@
+"""Fleet run metrics (`repro.fleet.metrics`).
+
+One `FleetMetrics` per `run_fleet` call; the supervisor also writes it
+to `<coord>/metrics.json` so CI can gate on `accounted == total` and
+archive the JSON as an artifact.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List
+
+
+@dataclass
+class FleetMetrics:
+    """Counters the supervisor accumulates over one fleet run."""
+    total: int = 0              # chunks in the task list
+    done: int = 0               # chunks with verified results (any run)
+    already_done: int = 0       # completed by a *previous* launch
+    computed: int = 0           # chunks this launch actually ran
+    poisoned: int = 0           # quarantined to the poison manifest
+    retried: int = 0            # requeue events (error or reap)
+    stragglers: int = 0         # chunks that blew the StepDeadline
+    kills: int = 0              # workers the supervisor SIGKILLed
+    lease_breaks: int = 0       # stale/dead leases the supervisor broke
+    worker_restarts: int = 0    # respawns beyond the initial pool
+    workers_spawned: int = 0    # total worker processes ever started
+    verify_requeues: int = 0    # done markers retracted (results missing)
+    wall_s: float = 0.0
+    chaos: str = ""             # the FaultPlan spec, if any
+    poison: List[Dict] = field(default_factory=list)
+
+    @property
+    def accounted(self) -> int:
+        """Chunks with a terminal disposition. The CI gate:
+        `accounted == total` means nothing fell through the cracks."""
+        return self.done + self.poisoned
+
+    def as_dict(self) -> Dict:
+        d = {k: getattr(self, k) for k in (
+            "total", "done", "already_done", "computed", "poisoned",
+            "retried", "stragglers", "kills", "lease_breaks",
+            "worker_restarts", "workers_spawned", "verify_requeues",
+            "wall_s", "chaos", "poison")}
+        d["accounted"] = self.accounted
+        return d

@@ -1,25 +1,73 @@
 """Content-addressed blob store — the shared machinery behind the sweep
-result cache (`repro.scenarios.ResultCache`) and the training dataset
-store (`repro.train.DatasetStore`).
+result cache (`repro.scenarios.ResultCache`), the training dataset store
+(`repro.train.DatasetStore`), and the fleet's coordination spine
+(`repro.fleet`).
 
 Layout: `<root>/<key[:2]>/<key>.msgpack.z` — sharded by key prefix so
 huge stores never produce one giant directory. Entries are msgpack
-payloads compressed through `runtime.checkpoint` (zstd, zlib fallback,
-format sniffed on read). Writes are atomic (unique tempfile + rename,
-so concurrent writers of the same key never interleave into one file);
-corrupt or truncated entries read as misses and are removed, to be
-rebuilt by the caller. Subclasses define only the payload codec
-(`_encode`/`_decode`).
+payloads compressed with zstd (zlib fallback, format sniffed on read)
+and wrapped in an integrity envelope: a 4-byte magic plus the sha256 of
+the compressed body, verified on every read. Writes are atomic (unique
+tempfile + rename, so concurrent writers of the same key never
+interleave into one file); a truncated, bit-flipped, or otherwise
+undecodable entry is *quarantined* — renamed aside to `<path>.corrupt`
+with a warning — and reads as a miss, so one bad shard costs a rebuild
+of that key instead of wedging every consumer with a decode error.
+Subclasses define only the payload codec (`_encode`/`_decode`).
+
+`LeaseDir` provides the other half of the fleet's coordination: atomic
+lease files (O_CREAT|O_EXCL claim carrying the owner id, liveness via
+heartbeat mtime). Leases are an *efficiency* mechanism — they keep two
+workers from duplicating a chunk — not a correctness one: blob writes
+are content-addressed and atomic, so even a broken lease that lets two
+workers compute the same chunk just makes both write identical bytes.
+
+This module stays jax-free on purpose: fleet worker processes running
+pure-python backends (packet, flowsim) import it without paying the
+jax/XLA startup tax.
 """
 from __future__ import annotations
 
+import hashlib
+import json
+import logging
 import os
 import tempfile
-from typing import Optional
+import time
+import zlib
+from typing import List, Optional
 
 import msgpack
 
-from .checkpoint import _compress, _decompress
+try:
+    import zstandard
+except ImportError:          # degrade to stdlib zlib; format sniffed on read
+    zstandard = None
+
+logger = logging.getLogger("repro.blobstore")
+
+_ZSTD_MAGIC = b"\x28\xb5\x2f\xfd"
+
+# integrity envelope: magic + sha256(compressed body) + compressed body.
+# Files without the magic are legacy entries (pre-envelope) — decoded
+# best-effort, quarantined on failure like everything else.
+_ENVELOPE_MAGIC = b"RBS1"
+_DIGEST_LEN = 32
+
+
+def _compress(raw: bytes) -> bytes:
+    if zstandard is not None:
+        return zstandard.ZstdCompressor(level=3).compress(raw)
+    return zlib.compress(raw, 6)
+
+
+def _decompress(comp: bytes) -> bytes:
+    if comp[:4] == _ZSTD_MAGIC:
+        if zstandard is None:
+            raise IOError("blob is zstd-compressed but zstandard "
+                          "is not installed")
+        return zstandard.ZstdDecompressor().decompress(comp)
+    return zlib.decompress(comp)
 
 
 class BlobStore:
@@ -44,21 +92,41 @@ class BlobStore:
     def __contains__(self, key: str) -> bool:
         return os.path.exists(self._path(key))
 
+    def _quarantine(self, path: str, why: str):
+        """Rename a corrupt entry aside (never delete — forensics) so the
+        next build replaces it and other readers see a clean miss."""
+        try:
+            os.replace(path, path + ".corrupt")
+            logger.warning("quarantined corrupt blob %s -> %s.corrupt (%s)",
+                           path, path, why)
+        except OSError:
+            pass    # a concurrent process quarantined or replaced it first
+
     def get(self, key: str) -> Optional[object]:
-        """The stored object, or None on miss/corruption (corrupt entries
-        are deleted so the next build replaces them)."""
+        """The stored object, or None on miss/corruption.
+
+        Every read verifies the envelope's content hash, so a truncated
+        or bit-flipped entry can never decode into garbage — it is
+        quarantined (renamed to `<path>.corrupt` with a warning) and
+        treated as a cache miss for the caller to rebuild."""
         path = self._path(key)
-        if not os.path.exists(path):
-            return None
         try:
             with open(path, "rb") as f:
-                payload = msgpack.unpackb(_decompress(f.read()), raw=False)
+                data = f.read()
+        except OSError:
+            return None
+        try:
+            if data[:4] == _ENVELOPE_MAGIC:
+                digest = data[4:4 + _DIGEST_LEN]
+                comp = data[4 + _DIGEST_LEN:]
+                if hashlib.sha256(comp).digest() != digest:
+                    raise IOError("content hash mismatch")
+            else:                       # legacy entry: no embedded digest
+                comp = data
+            payload = msgpack.unpackb(_decompress(comp), raw=False)
             return self._decode(payload)
-        except Exception:
-            try:
-                os.remove(path)   # a concurrent process may have removed it
-            except OSError:
-                pass
+        except Exception as exc:
+            self._quarantine(path, f"{type(exc).__name__}: {exc}")
             return None
 
     def put(self, key: str, obj) -> str:
@@ -66,10 +134,12 @@ class BlobStore:
         path = self._path(key)
         os.makedirs(os.path.dirname(path), exist_ok=True)
         raw = msgpack.packb(self._encode(obj), use_bin_type=True)
+        comp = _compress(raw)
+        body = _ENVELOPE_MAGIC + hashlib.sha256(comp).digest() + comp
         fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path), suffix=".tmp")
         try:
             with os.fdopen(fd, "wb") as f:
-                f.write(_compress(raw))
+                f.write(body)
             os.replace(tmp, path)
         except BaseException:
             try:
@@ -78,3 +148,78 @@ class BlobStore:
                 pass
             raise
         return path
+
+
+# ---------------------------------------------------------------- leasing
+class LeaseDir:
+    """Atomic lease files for distributed work claiming (`repro.fleet`).
+
+    A lease is one file `<root>/<task_id>.lease` created with
+    O_CREAT|O_EXCL — the filesystem arbitrates exactly one winner per
+    task — whose JSON body names the owner (worker id + pid) and whose
+    mtime is the owner's heartbeat: workers `heartbeat()` while they
+    hold a chunk, and a supervisor treats `age() > timeout` as a dead or
+    wedged owner and breaks the lease. Same tmp-free atomicity story as
+    blob writes: a lease either exists with its full body or not at all
+    (the body is written through the O_EXCL fd before anyone can claim
+    contention, and losers never touch the file).
+    """
+
+    def __init__(self, root: str):
+        self.root = root
+
+    def _path(self, task_id: str) -> str:
+        return os.path.join(self.root, task_id + ".lease")
+
+    def claim(self, task_id: str, owner: str) -> bool:
+        """Try to claim `task_id` for `owner`; True iff we won the file."""
+        os.makedirs(self.root, exist_ok=True)
+        try:
+            fd = os.open(self._path(task_id),
+                         os.O_CREAT | os.O_EXCL | os.O_WRONLY)
+        except FileExistsError:
+            return False
+        with os.fdopen(fd, "w") as f:
+            json.dump({"owner": owner, "pid": os.getpid(),
+                       "t_claim": time.time()}, f)
+        return True
+
+    def heartbeat(self, task_id: str):
+        """Refresh the lease mtime (no-op if the lease was broken)."""
+        try:
+            os.utime(self._path(task_id))
+        except OSError:
+            pass
+
+    def release(self, task_id: str):
+        try:
+            os.remove(self._path(task_id))
+        except OSError:
+            pass
+
+    def owner(self, task_id: str) -> Optional[dict]:
+        """The claim body ({owner, pid, t_claim}), or None if unclaimed
+        (or claimed so recently the body isn't visible — treat as held)."""
+        try:
+            with open(self._path(task_id)) as f:
+                return json.load(f)
+        except (OSError, ValueError):
+            return None
+
+    def age(self, task_id: str) -> Optional[float]:
+        """Seconds since the last heartbeat, or None if unclaimed."""
+        try:
+            return time.time() - os.path.getmtime(self._path(task_id))
+        except OSError:
+            return None
+
+    def held(self, task_id: str) -> bool:
+        return os.path.exists(self._path(task_id))
+
+    def active(self) -> List[str]:
+        """Task ids of every lease currently on disk."""
+        try:
+            names = os.listdir(self.root)
+        except OSError:
+            return []
+        return [n[:-len(".lease")] for n in names if n.endswith(".lease")]

@@ -20,30 +20,11 @@ import jax.numpy as jnp
 import msgpack
 import numpy as np
 
-try:
-    import zstandard
-except ImportError:          # degrade to stdlib zlib; format sniffed on read
-    zstandard = None
-import zlib
-
-_ZSTD_MAGIC = b"\x28\xb5\x2f\xfd"
+# compression lives in the jax-free blobstore module (fleet workers read
+# blobs without importing jax); re-exported here for compatibility
+from .blobstore import _compress, _decompress
 
 _DTYPE_FIX = {"bfloat16": jnp.bfloat16}
-
-
-def _compress(raw: bytes) -> bytes:
-    if zstandard is not None:
-        return zstandard.ZstdCompressor(level=3).compress(raw)
-    return zlib.compress(raw, 6)
-
-
-def _decompress(comp: bytes) -> bytes:
-    if comp[:4] == _ZSTD_MAGIC:
-        if zstandard is None:
-            raise IOError("checkpoint is zstd-compressed but zstandard "
-                          "is not installed")
-        return zstandard.ZstdDecompressor().decompress(comp)
-    return zlib.decompress(comp)
 
 
 def _path_str(path) -> str:
@@ -146,3 +127,29 @@ def restore(ckpt_dir: str, tree_like, step: int | None = None):
             out.append(jnp.asarray(arr))
     return jax.tree_util.tree_unflatten(
         jax.tree_util.tree_structure(tree_like), out), step
+
+
+def restore_latest_loadable(ckpt_dir: str, tree_like):
+    """Restore the newest committed checkpoint that actually loads.
+
+    The COMMITTED marker makes half-written checkpoints invisible, but a
+    committed step can still rot afterwards (disk corruption, a pre-
+    atomic-rename writer, a bit flip) — `restore` detects that via the
+    content hash and raises. This walks committed steps newest-first and
+    returns the first that restores cleanly, so a single bad epoch costs
+    a rollback instead of the whole run.
+
+    Returns (tree, step, skipped) where `skipped` is [(step, reason)]
+    for every newer checkpoint that failed to load. Raises
+    FileNotFoundError when no committed checkpoint loads at all.
+    """
+    skipped = []
+    for step in sorted(_steps(ckpt_dir), reverse=True):
+        try:
+            tree, _ = restore(ckpt_dir, tree_like, step=step)
+            return tree, step, skipped
+        except Exception as exc:
+            skipped.append((step, f"{type(exc).__name__}: {exc}"))
+    detail = "; ".join(f"step {s}: {r}" for s, r in skipped) or "none found"
+    raise FileNotFoundError(
+        f"no loadable committed checkpoint in {ckpt_dir} ({detail})")

@@ -1,31 +1,37 @@
-"""Fault-tolerance / straggler / elasticity policies for large fleets.
+"""Fault-tolerance policies — live code behind `repro.fleet`.
 
-What runs here on the CPU harness is the single-process skeleton of the
-policies a 1000+-node deployment needs; the collective-level behaviour is
-exercised in the multi-pod dry-run (sharding must stay legal under a
-changed mesh, which `remesh` checks by construction).
+This module started as dormant scaffolding; it is now the policy layer
+the fleet supervisor (`repro.fleet.supervisor`) actually enforces on
+every run:
 
-1. Checkpoint/restart: `runtime.checkpoint` + `TrainLoop --resume auto`
-   (atomic COMMITTED marker; data pipeline is step-indexed so restart is
-   bit-exact — tested in tests/test_runtime.py).
-2. Straggler mitigation: `StepDeadline` tracks a robust (median + k*MAD)
-   per-step deadline; steps exceeding it are logged and counted, and the
-   policy object reports when a rank should be declared straggling so the
-   controller can re-shard around it (on TPU pods, the equivalent of
-   hot-swapping a slice).
-3. Elastic scaling: `remesh` re-shards a checkpointed pytree onto a new
-   mesh by replaying the sharding rules against the new device set —
-   growing or shrinking `data` ranks never touches weights (they are
-   replicated on `data`), so elastic resizes are checkpoint-compatible by
-   construction.
+1. **Straggler detection** — `StepDeadline` tracks a robust
+   (median + k*MAD) per-chunk deadline over completed chunk wall times;
+   the supervisor flags running chunks past the deadline as stragglers
+   and reaps workers that blow well past it. Also used by the LM launch
+   harness (`launch/train.py`) for per-step deadlines.
+2. **Retry policy** — `Backoff` computes capped exponential backoff with
+   *deterministic* jitter (hashed from seed × task × attempt, no global
+   RNG): requeued chunks never re-stampede in lockstep, yet a replayed
+   fleet run schedules identically.
+3. **Error taxonomy** — `classify_error` splits failures into retryable
+   (crashes, timeouts, transient I/O: the chunk deserves another worker)
+   vs poison (deterministic failures: re-running reproduces them, so the
+   chunk is quarantined to the poison manifest instead of blocking the
+   sweep). See docs/FLEET.md for the full taxonomy.
+4. **Elastic scaling** — `remesh` re-shards a checkpointed pytree onto a
+   new mesh by replaying sharding rules against the new device set
+   (grow/shrink of `data` ranks never touches replicated weights).
+
+Checkpoint/restart itself lives in `runtime.checkpoint` (atomic
+COMMITTED marker + `restore_latest_loadable` rollback).
 """
 from __future__ import annotations
 
+import hashlib
 import time
 from dataclasses import dataclass, field
 from typing import List
 
-import jax
 import numpy as np
 
 
@@ -61,6 +67,55 @@ class StepDeadline:
         return max(med + self.k * mad, self.floor_s)
 
 
+@dataclass(frozen=True)
+class Backoff:
+    """Capped exponential backoff with deterministic, desynchronizing
+    jitter.
+
+    delay(attempt) grows base * factor^(attempt-1) up to cap, then a
+    jitter fraction is *subtracted*, hashed from (seed, token, attempt):
+    two chunks requeued at the same instant get different delays (no
+    retry stampede), while the same (seed, token, attempt) always yields
+    the same delay — fleet runs replay deterministically, which the
+    chaos harness relies on.
+    """
+    base_s: float = 0.5
+    factor: float = 2.0
+    cap_s: float = 30.0
+    jitter: float = 0.5       # fraction of the delay that jitter can shave
+    seed: int = 0
+
+    def delay(self, attempt: int, token: str = "") -> float:
+        """Seconds to wait before retry number `attempt` (1-based)."""
+        raw = min(self.base_s * self.factor ** max(attempt - 1, 0),
+                  self.cap_s)
+        h = hashlib.sha256(
+            f"{self.seed}|{token}|{attempt}".encode()).digest()
+        frac = int.from_bytes(h[:4], "big") / float(1 << 32)
+        return raw * (1.0 - self.jitter * frac)
+
+
+# Exception types whose failures are worth retrying on another worker:
+# process crashes and timeouts are detected out-of-band (no exception
+# object survives a SIGKILL), so this covers in-process transients.
+RETRYABLE_EXC_TYPES = (OSError, TimeoutError, ConnectionError,
+                       InterruptedError, MemoryError)
+
+
+def classify_error(exc: BaseException) -> bool:
+    """True if `exc` is retryable (transient), False if poison.
+
+    Retryable: crash/timeout/transient-I/O shaped — OSError and friends,
+    plus anything that *says* it is transient. Poison: deterministic
+    failures (ValueError, TypeError, shape errors, NotImplementedError,
+    ...) — re-running reproduces them, so retrying only burns workers;
+    the supervisor quarantines the chunk to the poison manifest instead.
+    """
+    if isinstance(exc, RETRYABLE_EXC_TYPES):
+        return True
+    return bool(getattr(exc, "retryable", False))
+
+
 class Timed:
     def __enter__(self):
         self.t0 = time.perf_counter()
@@ -76,6 +131,7 @@ def remesh(tree, rule_fn, new_mesh):
     rule_fn(path, leaf) -> PartitionSpec. Works for both elastic grow and
     shrink because specs are expressed in axis names, not device counts.
     """
+    import jax
     from jax.sharding import NamedSharding
 
     def place(path, leaf):

@@ -27,10 +27,12 @@ from .spec import ScenarioSpec, Sweep
 
 @dataclass
 class SweepEntry:
-    """One scenario's outcome inside a sweep."""
+    """One scenario's outcome inside a sweep. `result` is None only for
+    scenarios whose fleet chunk was poisoned (quarantined after a
+    deterministic failure — see `SweepReport.fleet`)."""
     spec: ScenarioSpec
     request: SimRequest
-    result: SimResult
+    result: Optional[SimResult]
     cached: bool      # True -> served from the on-disk result cache
 
 
@@ -41,6 +43,7 @@ class SweepReport:
     backend: str
     entries: List[SweepEntry]
     wall_time: float      # end-to-end runner time (incl. flow generation)
+    fleet: Optional[dict] = None   # FleetMetrics.as_dict() of a fleet run
 
     @property
     def hits(self) -> int:
@@ -56,13 +59,14 @@ class SweepReport:
         """Per-scenario summary rows (what the CLI table prints)."""
         out = []
         for e in self.entries:
-            s = e.result.slowdowns
+            s = e.result.slowdowns if e.result is not None else []
             out.append({
                 "scenario": e.spec.label,
                 "workload": e.spec.workload,
                 "flows": e.request.num_flows,
                 "cached": e.cached,
-                "wall_s": e.result.wall_time,
+                "wall_s": e.result.wall_time if e.result is not None
+                else float("nan"),
                 "sldn_mean": float(np.nanmean(s)) if len(s) else float("nan"),
                 "sldn_p99": float(np.nanpercentile(s, 99)) if len(s)
                 else float("nan"),
@@ -99,13 +103,25 @@ class SweepRunner:
     None runs the whole sweep as a single chunk. cache_dir=None disables
     caching (timing benchmarks should disable it — a cache hit reports the
     *cached* wall time, not a re-measurement).
+
+    fleet=FleetConfig(...) shards cache misses across supervised worker
+    processes (`repro.fleet`) instead of running them in-process: workers
+    claim chunks via lease files, write through this runner's cache, and
+    survive crashes/stragglers/poison chunks — see docs/FLEET.md. Fleet
+    mode requires a cache_dir (the cache *is* the result channel) and
+    keeps the same chunking discipline as `run_chunked`, so fleet and
+    in-process runs of the same sweep fill identical cache entries.
     """
 
     def __init__(self, backend, *, cache_dir: Optional[str] = None,
-                 chunk_size: Optional[int] = 8):
+                 chunk_size: Optional[int] = 8, fleet=None):
+        if fleet is not None and cache_dir is None:
+            raise ValueError("fleet mode needs a cache_dir: workers hand "
+                             "results back through the result cache")
         self.backend = backend
         self.cache = ResultCache(cache_dir) if cache_dir else None
         self.chunk_size = chunk_size
+        self.fleet = fleet
 
     def run(self, sweep: Union[Sweep, Sequence[ScenarioSpec]],
             **request_options) -> SweepReport:
@@ -140,7 +156,17 @@ class SweepRunner:
                     results[i], cached[i] = hit, True
 
         miss = [i for i, r in enumerate(results) if r is None]
-        if miss:
+        fleet_metrics = None
+        if miss and self.fleet is not None and use_cache:
+            fleet_metrics = self._run_fleet(name, specs, requests, keys,
+                                            miss, results, request_options)
+        elif miss:
+            if self.fleet is not None:
+                # record_events bypasses the cache, and the cache is the
+                # fleet's only result channel — run in-process instead
+                raise ValueError("fleet mode cannot serve "
+                                 "record_events=True (results round-trip "
+                                 "through the cache, which drops events)")
             # each chunk is one run_many = at most one compiled executable;
             # more means a static arg or padding shape varied mid-sweep
             chunks = 1 if not self.chunk_size else \
@@ -159,4 +185,43 @@ class SweepRunner:
                    for s, r, res, c in zip(specs, requests, results, cached)]
         return SweepReport(name=name, backend=self.backend.name,
                            entries=entries,
-                           wall_time=time.perf_counter() - t0)
+                           wall_time=time.perf_counter() - t0,
+                           fleet=fleet_metrics)
+
+    def _run_fleet(self, name, specs, requests, keys, miss, results,
+                   request_options):
+        """Dispatch the cache misses through a supervised worker fleet;
+        fills `results` in place from the cache afterwards and returns
+        the run's metrics dict. Scenarios whose chunk was poisoned stay
+        None. Falls back to the in-process path when spawn workers can't
+        start (no importable __main__ — stdin/REPL parents)."""
+        from ..fleet import default_coord_dir, run_fleet, sweep_job_for, \
+            sweep_tasks
+        from ..train.data import _pool_usable
+        if not _pool_usable():
+            chunks = 1 if not self.chunk_size else \
+                -(-len(miss) // self.chunk_size)
+            with no_retrace(allowed=chunks, label=f"sweep '{name}'"):
+                fresh = self.backend.run_chunked([requests[i] for i in miss],
+                                                 self.chunk_size)
+            for i, res in zip(miss, fresh):
+                results[i] = res
+                self.cache.put(keys[i], res)
+            return None
+        job = sweep_job_for(self.backend, self.cache.root,
+                            request_options=request_options)
+        tasks = sweep_tasks([specs[i] for i in miss],
+                            [requests[i] for i in miss],
+                            [keys[i] for i in miss], self.chunk_size)
+        config = self.fleet
+        if config.coord_dir is None:
+            config = config.with_coord_dir(
+                default_coord_dir(self.cache.root, tasks))
+        metrics = run_fleet(tasks, job, config)
+        for i in miss:
+            res = self.cache.get(keys[i])
+            if res is not None:
+                check_result_finite(f"{self.backend.name}:{specs[i].name}",
+                                    res)
+            results[i] = res
+        return metrics.as_dict()

@@ -14,7 +14,9 @@ serialize flow lists or numpy arrays.
         -> 503 ServiceOverloaded (Retry-After header) or service closed
         -> 504 request sat queued past its deadline
     GET  /metrics    -> 200 ServiceMetrics snapshot (see serve.metrics)
-    GET  /healthz    -> 200 {"ok": true, "backends": [...]}
+    GET  /healthz    -> 200 {"ok": true, "status": "ok", ...} healthy;
+                        503 with status "degraded" (a lane's dispatcher
+                        thread died) or "closed"
 
 `ThreadingHTTPServer` gives one handler thread per connection; handlers
 block on their request's future, so concurrency and batching live
@@ -27,6 +29,7 @@ import json
 import threading
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 from typing import Optional
+from urllib.error import HTTPError
 from urllib.request import Request, urlopen
 
 from ..scenarios.spec import ScenarioSpec
@@ -85,8 +88,9 @@ class _Handler(BaseHTTPRequestHandler):
         if self.path == "/metrics":
             self._send(200, service.metrics())
         elif self.path == "/healthz":
-            self._send(200, {"ok": not service.closed,
-                             "backends": sorted(service._lanes)})
+            health = service.health()
+            # degraded/closed -> 503 so LB health checks route away
+            self._send(200 if health["ok"] else 503, health)
         else:
             self._send(404, {"error": f"no route {self.path!r}"})
 
@@ -185,4 +189,10 @@ class ServeClient:
         return self._call("/metrics")
 
     def health(self) -> dict:
-        return self._call("/healthz")
+        """The /healthz body. A degraded or closed service answers 503
+        with the same JSON shape — returned here, not raised, so callers
+        can always inspect `status`/`dead_lanes`."""
+        try:
+            return self._call("/healthz")
+        except HTTPError as exc:
+            return json.loads(exc.read())

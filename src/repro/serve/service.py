@@ -44,6 +44,7 @@ single wall-clock sleep.
 """
 from __future__ import annotations
 
+import hashlib
 import threading
 from concurrent.futures import Future, InvalidStateError
 from dataclasses import dataclass, field
@@ -56,11 +57,26 @@ from .clock import Clock, MonotonicClock
 from .metrics import ServiceMetrics, merge_snapshots
 
 
+def retry_after_jitter(base_s: float, key: str) -> float:
+    """Deterministic retry-after hint in [base, 2*base).
+
+    The jitter fraction is hashed from the request's cache key, so a
+    cohort of synchronized clients rejected on the same tick gets spread
+    over a full flush interval instead of re-stampeding together — while
+    the *same* request always receives the same hint (testable, and a
+    client retry loop stays reproducible)."""
+    digest = hashlib.sha256(key.encode()).digest()
+    frac = int.from_bytes(digest[:4], "big") / float(1 << 32)
+    return base_s * (1.0 + frac)
+
+
 class ServiceOverloaded(RuntimeError):
     """Admission control rejected the request: the lane's queue is full.
 
-    Carries `retry_after_s` — the flush interval, i.e. when queue space
-    plausibly opens up. The HTTP front-end maps this to 503 + Retry-After.
+    Carries `retry_after_s` — roughly a flush interval (when queue space
+    plausibly opens up) plus per-request deterministic jitter
+    (`retry_after_jitter`). The HTTP front-end maps this to
+    503 + Retry-After.
     """
 
     def __init__(self, lane: str, queued: int, retry_after_s: float):
@@ -216,8 +232,9 @@ class SimService:
                 return fut
             if lane.queued >= self.config.max_queue:
                 lane.metrics.count("rejected")
-                raise ServiceOverloaded(lane.name, lane.queued,
-                                        self.config.flush_interval_s)
+                raise ServiceOverloaded(
+                    lane.name, lane.queued,
+                    retry_after_jitter(self.config.flush_interval_s, key))
             pending = _Pending(
                 request=request, key=key, bucket=self._bucket_key(request),
                 enqueue_t=now,
@@ -272,6 +289,23 @@ class SimService:
     @property
     def closed(self) -> bool:
         return self._closed
+
+    def health(self) -> dict:
+        """Liveness summary for `/healthz`.
+
+        status is "ok", "degraded" (a lane's dispatcher thread died —
+        that backend's queue will never drain, even though submits still
+        succeed), or "closed". `ok` is True only for "ok": a degraded
+        service must fail load-balancer health checks so traffic moves
+        to a live replica instead of queueing into a dead lane.
+        """
+        dead = sorted(name for name, lane in self._lanes.items()
+                      if lane.thread is not None
+                      and not lane.thread.is_alive())
+        status = "closed" if self._closed else \
+            ("degraded" if dead else "ok")
+        return {"ok": status == "ok", "status": status,
+                "backends": sorted(self._lanes), "dead_lanes": dead}
 
     def __enter__(self) -> "SimService":
         return self

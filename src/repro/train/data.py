@@ -14,10 +14,15 @@ CI caches the store directory under the aggregate `dataset_key`.
 Cache misses fan out across worker *processes* (the DES is pure-Python
 and CPU-bound, so threads won't do); workers are spawned, not forked —
 the parent usually has JAX initialized, and forking a live XLA runtime
-is undefined behaviour. Storage is `runtime.blobstore.BlobStore` — the
-same sharded content-addressed directory scheme, compression and
-atomic-write discipline as `repro.scenarios.ResultCache` — so concurrent
-builds of overlapping corpora are safe.
+is undefined behaviour. The pool is a `repro.fleet` run (one task per
+missing shard, the store as result channel), so multi-worker builds
+inherit lease-based claiming, crash/straggler reaping and retry with
+backoff instead of dying with the first worker exception — and a
+killed build resumes from whatever shards completed. Storage is
+`runtime.blobstore.BlobStore` — the same sharded content-addressed
+directory scheme, compression and atomic-write discipline as
+`repro.scenarios.ResultCache` — so concurrent builds of overlapping
+corpora are safe.
 """
 from __future__ import annotations
 
@@ -105,7 +110,9 @@ def _build_one(spec, m4cfg: M4Config, max_events, request_seed) -> EventBatch:
 
 
 def _worker(args) -> Tuple[str, str]:
-    """Build + persist one shard in a worker process; returns (key, path)."""
+    """Build + persist one shard inline; returns (key, path). Kept as the
+    single-process path (workers<=1) — multi-worker builds go through
+    `repro.fleet.DatasetJob`, which calls the same `_build_one`."""
     root, key, spec, m4cfg, max_events, request_seed = args
     batch = _build_one(spec, m4cfg, max_events, request_seed)
     path = DatasetStore(root).put(key, batch)
@@ -137,6 +144,7 @@ class DatasetReport:
     wall_s: float
     root: str
     built_paths: List[str] = field(default_factory=list)
+    fleet: Optional[dict] = None   # FleetMetrics of a multi-worker build
 
     @property
     def hit_rate(self) -> float:
@@ -150,15 +158,24 @@ class DatasetReport:
 
 def build_dataset(specs: Sequence, m4cfg: M4Config, root: str, *,
                   max_events: Optional[int] = None, workers: int = 0,
-                  request_seed: int = 0,
+                  request_seed: int = 0, fleet=None,
                   log=None) -> Tuple[List[EventBatch], DatasetReport]:
     """Materialize the corpus: serve hits from the store, fan misses
-    across `workers` processes (0/1 = build inline), return batches in
-    spec order plus a `DatasetReport`.
+    across `workers` supervised fleet processes (0/1 = build inline),
+    return batches in spec order plus a `DatasetReport`.
+
+    Multi-worker builds run as a `repro.fleet` job — one task per
+    missing shard, the store as the result channel — so a crashed or
+    wedged worker costs a retry, not the build, and a killed build
+    resumes from completed shards. A shard that fails deterministically
+    is quarantined to the fleet's poison manifest and reported here as
+    an IOError naming it (a corpus with holes can't train). `fleet`
+    accepts a `repro.fleet.FleetConfig` to override supervision knobs
+    (its `workers` wins over the `workers` argument).
 
     Determinism: a spec's shard bytes depend only on its content key —
     flow generation is seeded by `spec.seed`, the DES by `request_seed` —
-    so inline and worker-pool builds of the same corpus are identical
+    so inline and fleet builds of the same corpus are identical
     (asserted in tests/test_train.py), and every miss is reproducible
     in isolation.
     """
@@ -171,30 +188,42 @@ def build_dataset(specs: Sequence, m4cfg: M4Config, root: str, *,
     miss = [i for i, b in enumerate(batches) if b is None]
     hits = len(specs) - len(miss)
     built_paths = []
+    fleet_metrics = None
     if miss:
         if log:
             log(f"[train.data] {hits} cached, building {len(miss)} shard(s)"
                 f" with {max(workers, 1)} worker(s)")
-        jobs = [(root, keys[i], specs[i], m4cfg, max_events, request_seed)
-                for i in miss]
-        use_pool = workers and workers > 1 and len(miss) > 1
+        use_pool = (fleet is not None or (workers and workers > 1)) \
+            and len(miss) > 1
         if use_pool and not _pool_usable():
             if log:
                 log("[train.data] no importable __main__ (stdin/REPL) — "
                     "spawn workers unavailable, building inline")
             use_pool = False
         if use_pool:
-            import multiprocessing as mp
-            ctx = mp.get_context("spawn")
-            with ctx.Pool(min(workers, len(miss))) as pool:
-                for key, path in pool.imap_unordered(_worker, jobs):
-                    built_paths.append(path)
+            from ..fleet import (DatasetJob, FleetConfig, dataset_tasks,
+                                 default_coord_dir, run_fleet)
+            job = DatasetJob(root=root, m4cfg=m4cfg, max_events=max_events,
+                             request_seed=request_seed)
+            tasks = dataset_tasks([specs[i] for i in miss],
+                                  [keys[i] for i in miss])
+            config = fleet if fleet is not None \
+                else FleetConfig(workers=min(workers, len(miss)))
+            if config.coord_dir is None:
+                config = config.with_coord_dir(
+                    default_coord_dir(root, tasks))
+            fleet_metrics = run_fleet(tasks, job, config, log=log).as_dict()
             for i in miss:
                 batches[i] = store.get(keys[i])
                 if batches[i] is None:
                     raise IOError(
-                        f"worker-built shard {keys[i][:12]} unreadable")
+                        f"shard {keys[i][:12]} missing after fleet build "
+                        f"({fleet_metrics['poisoned']} shard(s) poisoned — "
+                        f"see {config.coord_dir}/poison/)")
+                built_paths.append(store._path(keys[i]))
         else:
+            jobs = [(root, keys[i], specs[i], m4cfg, max_events,
+                     request_seed) for i in miss]
             for job in jobs:
                 key, path = _worker(job)
                 built_paths.append(path)
@@ -205,7 +234,7 @@ def build_dataset(specs: Sequence, m4cfg: M4Config, root: str, *,
                         f"freshly built shard {keys[i][:12]} unreadable")
     report = DatasetReport(keys=keys, hits=hits, misses=len(miss),
                            wall_s=time.perf_counter() - t0, root=root,
-                           built_paths=built_paths)
+                           built_paths=built_paths, fleet=fleet_metrics)
     if log:
         log(f"[train.data] corpus ready: {len(specs)} shard(s), "
             f"{report.hits} hit / {report.misses} built, "

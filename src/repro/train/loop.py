@@ -93,11 +93,14 @@ def load_state(ckpt_dir: Optional[str], m4cfg: M4Config, seed: int = 0,
     """Restore the latest committed `TrainState` from `ckpt_dir`.
 
     Returns (state, completed_epochs), or (None, None) when no committed
-    checkpoint exists. Raises on an unreadable/incompatible checkpoint —
-    callers that can retrain should catch and start fresh."""
+    checkpoint exists. A corrupt latest checkpoint falls back to the
+    newest older one that loads (`restore_latest_loadable`); raises only
+    when *no* committed checkpoint is readable — callers that can
+    retrain should catch and start fresh."""
     if not ckpt_dir or ckpt.latest_step(ckpt_dir) is None:
         return None, None
-    tree, step = ckpt.restore(ckpt_dir, init_state(m4cfg, seed).tree())
+    tree, step, _ = ckpt.restore_latest_loadable(
+        ckpt_dir, init_state(m4cfg, seed).tree())
     return TrainState(**tree), step
 
 
@@ -307,12 +310,24 @@ def fit(batches: Sequence[EventBatch], m4cfg: M4Config,
             log(f"[train] NOTE: ckpt_dir {tc.ckpt_dir} has a committed "
                 "checkpoint — it takes precedence over the passed `state` "
                 "(use a fresh ckpt_dir to warm-start from `state`)")
-        (tree), start_epoch = ckpt.restore(
-            tc.ckpt_dir, {"params": params, "opt": opt, "rng": rng})
-        params, opt, rng = tree["params"], tree["opt"], tree["rng"]
-        history = _read_history(tc.ckpt_dir, start_epoch)
-        log(f"[train] resumed from {tc.ckpt_dir} at epoch {start_epoch} "
-            f"(step {int(opt['step'])})")
+        try:
+            tree, start_epoch, skipped = ckpt.restore_latest_loadable(
+                tc.ckpt_dir, {"params": params, "opt": opt, "rng": rng})
+        except FileNotFoundError as exc:
+            # every committed checkpoint is unreadable: worth a loud
+            # warning, but a fresh start beats failing the whole run
+            log(f"[train] WARNING: {exc} — starting fresh")
+            tree, start_epoch, skipped = None, 0, []
+        if tree is not None:
+            for bad_step, why in skipped:
+                log(f"[train] skipping corrupt checkpoint "
+                    f"step {bad_step}: {why}")
+            params, opt, rng = tree["params"], tree["opt"], tree["rng"]
+            history = _read_history(tc.ckpt_dir, start_epoch)
+            log(f"[train] resumed from {tc.ckpt_dir} at epoch "
+                f"{start_epoch} (step {int(opt['step'])})"
+                + (f" — recovered past {len(skipped)} corrupt "
+                   "checkpoint(s)" if skipped else ""))
 
     shapes = sorted({b.shape for b in buckets})
     if start_epoch < tc.epochs:

@@ -374,8 +374,15 @@ def test_full_queue_rejects_with_backpressure():
         f2 = service.submit(stub_request(1))
         with pytest.raises(ServiceOverloaded) as exc_info:
             service.submit(stub_request(2))
-        assert exc_info.value.retry_after_s == pytest.approx(0.05)
-        assert service.metrics()["rejected"] == 1
+        # base flush interval plus deterministic per-request jitter
+        assert 0.05 <= exc_info.value.retry_after_s < 0.10
+        with pytest.raises(ServiceOverloaded) as exc_info2:
+            service.submit(stub_request(2))
+        assert exc_info2.value.retry_after_s == exc_info.value.retry_after_s
+        with pytest.raises(ServiceOverloaded) as exc_other:
+            service.submit(stub_request(3))
+        assert exc_other.value.retry_after_s != exc_info.value.retry_after_s
+        assert service.metrics()["rejected"] == 3
         clock.advance(0.06)                       # deadline flush drains
         f1.result(timeout=WAIT), f2.result(timeout=WAIT)
         # space opened up: admission works again
@@ -730,7 +737,55 @@ def test_http_metrics_and_healthz(http_service):
     assert m["submitted"] >= 1 and m["completed"] >= 1
     assert "queue_delay_p99_ms" in m and "flowsim" in m["lanes"]
     h = client.health()
-    assert h == {"ok": True, "backends": ["flowsim"]}
+    assert h == {"ok": True, "status": "ok", "backends": ["flowsim"],
+                 "dead_lanes": []}
+
+
+def test_health_reports_dead_dispatcher_lane():
+    """A lane whose dispatcher thread died must flip health to degraded
+    (not ok): that backend's queue will never drain again, so LB checks
+    have to route traffic elsewhere."""
+    service = SimService(StubBackend(), clock=ManualClock())
+    try:
+        assert service.health()["status"] == "ok"
+        dead = threading.Thread(target=lambda: None)
+        dead.start()
+        dead.join()
+        service._lanes["stub"].thread = dead
+        h = service.health()
+        assert h == {"ok": False, "status": "degraded",
+                     "backends": ["stub"], "dead_lanes": ["stub"]}
+    finally:
+        service.close(drain=False)
+
+
+def test_http_healthz_degraded_is_503(http_service):
+    service, server, client = http_service
+    dead = threading.Thread(target=lambda: None)
+    dead.start()
+    dead.join()
+    live = service._lanes["flowsim"].thread
+    try:
+        service._lanes["flowsim"].thread = dead
+        code, body, *_ = http_status(client, "GET", "/healthz")
+        assert code == 503 and body["status"] == "degraded"
+        assert body["dead_lanes"] == ["flowsim"]
+        # ServeClient.health returns the 503 body instead of raising
+        assert client.health()["ok"] is False
+    finally:
+        service._lanes["flowsim"].thread = live
+
+
+def test_retry_after_jitter_deterministic_spread():
+    """The retry hint is a pure function of the cache key, spread over
+    [base, 2*base): same request -> same hint, a cohort of distinct
+    requests -> distinct hints (no synchronized re-stampede)."""
+    from repro.serve.service import retry_after_jitter
+    hints = [retry_after_jitter(0.05, f"key-{i}") for i in range(32)]
+    assert all(0.05 <= h < 0.10 for h in hints)
+    assert len(set(hints)) == len(hints)
+    assert hints == [retry_after_jitter(0.05, f"key-{i}")
+                     for i in range(32)]
 
 
 def test_http_404_unknown_route(http_service):
@@ -793,8 +848,9 @@ def test_http_503_backpressure_with_retry_after():
             client, "POST", "/simulate",
             {"spec": dict(SPEC, seed=99, num_flows=4), "backend": "stub"})
         assert code == 503
-        assert body["retry_after_s"] == pytest.approx(0.05)
-        assert float(headers["Retry-After"]) == pytest.approx(0.05)
+        assert 0.05 <= body["retry_after_s"] < 0.10
+        assert float(headers["Retry-After"]) == \
+            pytest.approx(body["retry_after_s"], abs=1e-3)
     finally:
         server.shutdown()
         server.server_close()
@@ -808,7 +864,7 @@ def test_http_503_after_close(http_service):
                                  {"spec": SPEC})
     assert code == 503 and "closed" in body["error"]
     h = client.health()
-    assert h["ok"] is False
+    assert h["ok"] is False and h["status"] == "closed"
 
 
 def test_request_from_wire_net_tuples():

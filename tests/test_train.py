@@ -92,6 +92,9 @@ def test_worker_pool_matches_inline(corpus4, tmp_path):
     pooled, report = build_dataset(specs[:2], TINY, str(tmp_path / "w"),
                                    max_events=MAX_EVENTS, workers=2)
     assert report.misses == 2
+    # the pool is a fleet run: every shard accounted for, none poisoned
+    assert report.fleet is not None and report.fleet["done"] == 2
+    assert report.fleet["poisoned"] == 0
     for a, b in zip(inline_batches[:2], pooled):
         for k, v in a.to_arrays().items():
             np.testing.assert_array_equal(v, b.to_arrays()[k], err_msg=k)
@@ -370,3 +373,46 @@ def test_cli_kill_resume_end_to_end(tmp_path):
         "resumed run diverged from uninterrupted run"
     assert [e["loss"] for e in log2["train"]["epochs"]] == \
         [e["loss"] for e in log["train"]["epochs"]]
+
+
+def test_resume_rolls_back_past_corrupt_checkpoint(corpus4, tmp_path):
+    """A checkpoint that rots on disk after commit (bit flip) must not
+    kill the resume: auto-resume falls back to the newest checkpoint
+    that still loads, logs what it skipped, and the re-trained run ends
+    bitwise-identical to the uninterrupted one."""
+    _, batches, _ = corpus4
+    full_dir, rot_dir = str(tmp_path / "full"), str(tmp_path / "rot")
+    tc = TrainConfig(epochs=4, lr=1e-3, ckpt_dir=full_dir)
+    full_state, _ = fit(batches, TINY, tc, log=lambda *a: None)
+    shutil.copytree(full_dir, rot_dir)
+    newest = max(d for d in os.listdir(rot_dir) if d.startswith("step_"))
+    blob = os.path.join(rot_dir, newest, "state.msgpack.zst")
+    raw = bytearray(open(blob, "rb").read())
+    raw[10] ^= 0xFF
+    open(blob, "wb").write(bytes(raw))
+    # load_state itself already rolls back one epoch
+    restored, done = load_state(rot_dir, TINY)
+    assert done == 3
+    lines = []
+    res_state, res_hist = fit(batches, TINY,
+                              dataclasses.replace(tc, ckpt_dir=rot_dir),
+                              log=lambda *a: lines.append(" ".join(map(str, a))))
+    assert res_state.weights_hash() == full_state.weights_hash()
+    assert [h["epoch"] for h in res_hist] == [0, 1, 2, 3]
+    joined = "\n".join(lines)
+    assert "skipping corrupt checkpoint step 4" in joined
+    assert "at epoch 3" in joined                   # only epoch 4 redone
+    assert "recovered past 1 corrupt checkpoint(s)" in joined
+    # every checkpoint rotten -> loud fresh start, not a crash
+    for d in os.listdir(rot_dir):
+        if d.startswith("step_"):
+            b = os.path.join(rot_dir, d, "state.msgpack.zst")
+            raw = bytearray(open(b, "rb").read())
+            raw[10] ^= 0xFF
+            open(b, "wb").write(bytes(raw))
+    lines.clear()
+    fresh_state, fresh_hist = fit(batches, TINY,
+                                  dataclasses.replace(tc, ckpt_dir=rot_dir),
+                                  log=lambda *a: lines.append(str(a[0])))
+    assert len(fresh_hist) == 4                     # trained from scratch
+    assert any("starting fresh" in ln for ln in lines)
