@@ -286,6 +286,26 @@ def _cfg_dict(cfg):
     return {f.name: getattr(cfg, f.name) for f in dataclasses.fields(cfg)}
 
 
+def _obs_snapshot(report):
+    """The report's numeric facts as a `repro.obs/1` snapshot: gauges
+    named ``bench.<benchmark>.<field>{n="..."}``, mergeable with the
+    serve/fleet/train snapshots via ``python -m repro.obs --merge``.
+    Pure addition to the report — ``check()``/``check_serve()`` read only
+    ``entries``, so committed baselines without an ``obs`` key still
+    compare cleanly."""
+    from repro.obs.registry import MetricsRegistry, labeled
+    reg = MetricsRegistry(proc="perf_gate")
+    bench = report["benchmark"]
+    for e in report.get("entries", []):
+        for k, v in e.items():
+            if k == "n" or isinstance(v, bool) \
+                    or not isinstance(v, (int, float)):
+                continue
+            reg.set_gauge(labeled(f"bench.{bench}.{k}", n=str(e.get("n"))),
+                          float(v))
+    return reg.snapshot()
+
+
 def _host_info():
     import jax
     return {"hostname": socket.gethostname(),
@@ -375,6 +395,7 @@ def main(argv=None):
     for fname, report in reports.items():
         report["host"] = _host_info()
         report["measured_unix_time"] = int(time.time())
+        report["obs"] = _obs_snapshot(report)
         path = os.path.join(args.out_dir, fname)
         if args.check:
             if not os.path.exists(path):

@@ -59,6 +59,10 @@ def main(argv=None) -> int:
                     help="hard per-chunk wall clock cap in seconds")
     ap.add_argument("--metrics-out", default=None,
                     help="write the FleetMetrics JSON here")
+    ap.add_argument("--trace-dir",
+                    default=os.environ.get("REPRO_TRACE_DIR", ""),
+                    help="repro.obs trace span directory (tracing on when "
+                         "set; defaults from $REPRO_TRACE_DIR)")
     ap.add_argument("--expect-clean", action="store_true",
                     help="fail if any chunk was poisoned")
     args = ap.parse_args(argv)
@@ -80,7 +84,11 @@ def main(argv=None) -> int:
         heartbeat_s=args.heartbeat, lease_timeout_s=args.lease_timeout,
         max_attempts=args.max_attempts, chaos=plan,
         chunk_timeout_s=args.chunk_timeout,
-        backoff=Backoff(base_s=0.25, cap_s=10.0, seed=args.chaos_seed))
+        backoff=Backoff(base_s=0.25, cap_s=10.0, seed=args.chaos_seed),
+        trace_dir=args.trace_dir or None)
+    if args.trace_dir:
+        print(f"-- tracing to {args.trace_dir} "
+              f"(render: python -m repro.obs --dir {args.trace_dir})")
 
     backend = _build_backend(args.backend, log=print)
     runner = SweepRunner(backend, cache_dir=args.cache_dir,

@@ -139,3 +139,11 @@ class Coordinator:
 
     def read_metrics(self) -> Optional[dict]:
         return _read_json(os.path.join(self.root, "metrics.json"))
+
+    def write_obs(self, snapshot: Dict):
+        """Persist the run's `repro.obs/1` snapshot next to metrics.json
+        (input to `python -m repro.obs --merge`)."""
+        _write_json(os.path.join(self.root, "obs_snapshot.json"), snapshot)
+
+    def read_obs(self) -> Optional[dict]:
+        return _read_json(os.path.join(self.root, "obs_snapshot.json"))

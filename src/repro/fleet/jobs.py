@@ -91,12 +91,19 @@ class SweepJob(FleetJob):
         return ResultCache(self.cache_dir)
 
     def run(self, payload: dict) -> None:
+        from ..obs.trace import get_tracer
+        tracer = get_tracer()   # stdlib-only import, stays jax-free
         store = self._store()
-        requests = [s.to_request(**self.request_options)
-                    for s in payload["specs"]]
-        results = self._backend().run_many(requests)
-        for key, res in zip(payload["keys"], results):
-            store.put(key, res)
+        with tracer.span("fleet.build",
+                         attrs={"n": len(payload["specs"]),
+                                "backend": self.backend_name}):
+            requests = [s.to_request(**self.request_options)
+                        for s in payload["specs"]]
+            results = self._backend().run_many(requests)
+        with tracer.span("fleet.cache-write",
+                         attrs={"n": len(payload["keys"])}):
+            for key, res in zip(payload["keys"], results):
+                store.put(key, res)
 
     def verify(self, payload: dict) -> List[str]:
         store = self._store()
@@ -168,10 +175,14 @@ class DatasetJob(FleetJob):
         return DatasetStore(self.root)
 
     def run(self, payload: dict) -> None:
+        from ..obs.trace import get_tracer
         from ..train.data import _build_one
-        batch = _build_one(payload["spec"], self.m4cfg,
-                           self.max_events, self.request_seed)
-        self._store().put(payload["key"], batch)
+        tracer = get_tracer()
+        with tracer.span("fleet.build", attrs={"kind": "dataset"}):
+            batch = _build_one(payload["spec"], self.m4cfg,
+                               self.max_events, self.request_seed)
+        with tracer.span("fleet.cache-write"):
+            self._store().put(payload["key"], batch)
 
     def verify(self, payload: dict) -> List[str]:
         return [] if self._store().get(payload["key"]) is not None \

@@ -46,6 +46,8 @@ import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Set, Tuple
 
+from ..obs.trace import TRACE_PARENT_ENV, configure as obs_configure, \
+    get_tracer
 from ..runtime.resilience import Backoff, StepDeadline
 from .chaos import FaultPlan
 from .coord import Coordinator
@@ -72,6 +74,8 @@ class FleetConfig:
     straggler_kill_factor: float = 4.0        # x deadline -> reap
     deadline_k: float = 6.0                   # StepDeadline MAD multiplier
     verify_rounds: int = 2            # post-drain verify/requeue passes
+    trace_dir: Optional[str] = None   # repro.obs span JSONL dir; None
+    #                                   falls back to $REPRO_TRACE_DIR
 
     def with_coord_dir(self, coord_dir: str) -> "FleetConfig":
         return dataclasses.replace(self, coord_dir=coord_dir)
@@ -121,6 +125,20 @@ def run_fleet(tasks: List[Task], job: FleetJob, config: FleetConfig,
         chaos=config.chaos.spec if config.chaos else "")
     deadline = StepDeadline(k=config.deadline_k,
                             floor_s=config.lease_timeout_s)
+    # tracing: configure() also exports REPRO_TRACE_DIR, and the run
+    # span's ids go out via REPRO_TRACE_PARENT, so spawned workers both
+    # trace into the same directory and parent their lifetime spans here
+    tracer = (obs_configure(config.trace_dir, proc="fleet-supervisor")
+              if config.trace_dir else get_tracer())
+    run_span = tracer.span(
+        "fleet.run", attrs={"tasks": len(tasks), "workers": config.workers,
+                            "chaos": config.chaos.spec if config.chaos
+                            else ""})
+    trace_parent_set = False
+    if tracer.enabled:
+        os.environ[TRACE_PARENT_ENV] = \
+            f"{run_span.trace_id}:{run_span.span_id}"
+        trace_parent_set = True
     t0 = time.perf_counter()
 
     # ------------------------------------------------- startup recovery
@@ -194,7 +212,9 @@ def run_fleet(tasks: List[Task], job: FleetJob, config: FleetConfig,
                 if coord.is_done(tid):
                     rec = coord.done_record(tid) or {}
                     if "wall_s" in rec:
-                        deadline.observe(float(rec["wall_s"]))
+                        wall = float(rec["wall_s"])
+                        deadline.observe(wall)
+                        metrics.chunk_wall.observe(wall)
                     pending.discard(tid)
                     metrics.computed += 1
                     requeue_at.pop(tid, None)
@@ -310,6 +330,11 @@ def run_fleet(tasks: List[Task], job: FleetJob, config: FleetConfig,
     metrics.stragglers = max(metrics.stragglers, deadline.stragglers)
     metrics.wall_s = time.perf_counter() - t0
     coord.write_metrics(metrics.as_dict())
+    coord.write_obs(metrics.obs_snapshot())
+    run_span.end(done=metrics.done, poisoned=metrics.poisoned,
+                 computed=metrics.computed)
+    if trace_parent_set:
+        os.environ.pop(TRACE_PARENT_ENV, None)
     say(f"fleet done: {metrics.done}/{metrics.total} complete "
         f"({metrics.already_done} resumed, {metrics.computed} computed), "
         f"{metrics.poisoned} poisoned, {metrics.retried} retried, "

@@ -25,6 +25,7 @@ import threading
 import time
 from typing import List, Optional, Tuple
 
+from ..obs.trace import get_tracer, new_id, task_trace_id
 from ..runtime.resilience import classify_error
 from .chaos import ChaosMonkey, FaultPlan
 from .coord import Coordinator
@@ -45,6 +46,11 @@ def worker_entry(worker_index: int, coord_root: str, job: FleetJob,
                  heartbeat_s: float = 0.5, poll_s: float = 0.1) -> None:
     coord = Coordinator(coord_root)
     owner = f"w{worker_index}"
+    # tracing rides in on env (REPRO_TRACE_DIR / REPRO_TRACE_PARENT,
+    # inherited through spawn); with neither set this is all no-ops
+    tracer = get_tracer()
+    tracer.proc = f"fleet-{owner}"
+    wspan = tracer.span("fleet.worker", attrs={"worker": worker_index})
     monkey = ChaosMonkey(plan, worker_index, coord.chaos_dir,
                          [tid for tid, _ in tasks])
     # stagger scan order per worker so the pool doesn't stampede the
@@ -64,9 +70,28 @@ def worker_entry(worker_index: int, coord_root: str, job: FleetJob,
             # decision pending); held lease = someone else is on it
             if coord.has_error(task_id) or coord.leases.held(task_id):
                 continue
-            if not coord.leases.claim(task_id, owner):
+            # trace/span ids travel in the lease body: the task's trace
+            # id is deterministic (sha256 of the task id), so every
+            # retry attempt lands in the same trace, and the lease names
+            # the root span of the attempt that holds the chunk
+            meta = None
+            root_sid = ""
+            if tracer.enabled:
+                root_sid = new_id()
+                meta = {"trace_id": task_trace_id(task_id),
+                        "span_id": root_sid}
+            t_claim0 = time.time()
+            if not coord.leases.claim(task_id, owner, meta=meta):
                 continue
             claims += 1
+            root = tracer.span(
+                "fleet.task", trace_id=task_trace_id(task_id),
+                span_id=root_sid or None,
+                attrs={"task": task_id[:16], "owner": owner,
+                       "attempt": claims})
+            if tracer.enabled:
+                root.t_start = t_claim0     # the claim belongs to the task
+                tracer.emit_span("fleet.claim", root, t_claim0, time.time())
             stop = threading.Event()
             hb = threading.Thread(
                 target=_heartbeat_loop,
@@ -77,9 +102,10 @@ def worker_entry(worker_index: int, coord_root: str, job: FleetJob,
             try:
                 monkey.on_claim(task_id, claims)
                 monkey.on_run(task_id)
-                job.run(payload)
+                job.run(payload)    # emits fleet.build / fleet.cache-write
                 monkey.post_put(task_id, job.result_paths(payload))
-                missing = job.verify(payload)
+                with tracer.span("fleet.verify"):
+                    missing = job.verify(payload)
                 if missing:
                     # quarantined/unreadable right after writing — treat
                     # as transient I/O, recompute on retry
@@ -87,13 +113,17 @@ def worker_entry(worker_index: int, coord_root: str, job: FleetJob,
                         "results unreadable after write: "
                         + ", ".join(m[:12] for m in missing))
                 monkey.pre_done(task_id, claims)
-                coord.mark_done(task_id, owner,
-                                time.perf_counter() - t0, claims)
+                with tracer.span("fleet.done"):
+                    coord.mark_done(task_id, owner,
+                                    time.perf_counter() - t0, claims)
+                root.end(status="done")
             except Exception as exc:
                 coord.mark_error(task_id, owner, exc, classify_error(exc))
+                root.end(status=f"error:{type(exc).__name__}")
             finally:
                 stop.set()
                 coord.leases.release(task_id)
         if all_terminal:
+            wspan.end()
             return
         time.sleep(poll_s)

@@ -66,7 +66,12 @@ def resolve_mode(requested: str | None = None) -> str:
         raise ValueError(
             f"kernel mode {requested!r} invalid; choose one of {MODES}")
     if requested == "pallas" and _platform() != "tpu":
-        return "interpret"  # compiled Pallas needs the Mosaic TPU backend
+        requested = "interpret"  # compiled Pallas needs the Mosaic backend
+    # count resolutions per concrete mode so an obs snapshot shows which
+    # kernel path a run actually dispatched (lazy import: dispatch must
+    # stay importable before the obs package loads)
+    from ..obs.registry import get_registry, labeled
+    get_registry().inc(labeled("kernels.dispatch", mode=requested))
     return requested
 
 

@@ -1,0 +1,38 @@
+"""repro.obs — unified telemetry: metrics registry, trace spans, JAX
+profiling hooks, and exporters shared by sim/serve/train/fleet."""
+
+from .registry import (
+    SCHEMA,
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    get_registry,
+    hist_quantiles,
+    labeled,
+    merge_snapshots,
+    split_labels,
+)
+from .trace import (
+    NULL_SPAN,
+    Span,
+    Tracer,
+    configure,
+    get_tracer,
+    new_id,
+    read_spans,
+    spans_by_trace,
+    task_trace_id,
+)
+from .jaxprof import PhaseStats, live_array_bytes, phase
+from .export import lookup, parse_prometheus, to_prometheus
+
+__all__ = [
+    "SCHEMA", "Counter", "Gauge", "Histogram", "MetricsRegistry",
+    "get_registry", "hist_quantiles", "labeled", "merge_snapshots",
+    "split_labels",
+    "NULL_SPAN", "Span", "Tracer", "configure", "get_tracer", "new_id",
+    "read_spans", "spans_by_trace", "task_trace_id",
+    "PhaseStats", "live_array_bytes", "phase",
+    "lookup", "parse_prometheus", "to_prometheus",
+]

@@ -1,0 +1,92 @@
+"""JAX profiling hooks: compile wall vs steady wall, per phase.
+
+:func:`phase` wraps a named region of work and records, into the
+process registry and (when tracing is on) as a span:
+
+* wall-clock seconds, split into ``compile_wall_s`` vs ``wall_s``
+  depending on whether the region triggered new XLA traces (read from
+  the shared ``TRACE_COUNTS`` families via ``guards.trace_total``);
+* the number of new compiles;
+* live device-array bytes at phase exit (``jax.live_arrays()``).
+
+Everything is guarded on ``jax`` already being imported: a jax-free
+process (fleet workers driving pure-python backends, the analysis CLI)
+can call ``phase`` without dragging jax in.
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+from contextlib import contextmanager
+from typing import Iterator, Optional
+
+from .registry import MetricsRegistry, get_registry
+from .trace import get_tracer
+
+
+def _trace_total() -> int:
+    """Total XLA trace count across the shared counter families, or 0
+    when jax was never imported (importing guards' counter sources would
+    pull jax into jax-free worker processes)."""
+    if "jax" not in sys.modules:
+        return 0
+    try:
+        from ..runtime.guards import trace_total
+        return trace_total()
+    except Exception:
+        return 0
+
+
+def live_array_bytes() -> int:
+    """Bytes held by live jax arrays; 0 when jax is not imported."""
+    jax = sys.modules.get("jax")
+    if jax is None:
+        return 0
+    try:
+        total = 0
+        for a in jax.live_arrays():
+            total += int(getattr(a, "nbytes", 0) or 0)
+        return total
+    except Exception:
+        return 0
+
+
+class PhaseStats:
+    """Filled in when the ``phase`` block exits."""
+
+    __slots__ = ("name", "wall_s", "compiles", "live_bytes")
+
+    def __init__(self, name: str) -> None:
+        self.name = name
+        self.wall_s = 0.0
+        self.compiles = 0
+        self.live_bytes = 0
+
+
+@contextmanager
+def phase(name: str, registry: Optional[MetricsRegistry] = None,
+          attrs: Optional[dict] = None) -> Iterator[PhaseStats]:
+    """Profile one phase of work; usable whether or not jax is loaded."""
+    reg = registry if registry is not None else get_registry()
+    tracer = get_tracer()
+    stats = PhaseStats(name)
+    sp = tracer.span(f"phase:{name}", attrs=attrs)
+    c0 = _trace_total()
+    t0 = time.perf_counter()
+    try:
+        yield stats
+    finally:
+        stats.wall_s = time.perf_counter() - t0
+        stats.compiles = max(0, _trace_total() - c0)
+        stats.live_bytes = live_array_bytes()
+        reg.inc(f"phase.{name}.calls")
+        if stats.compiles:
+            reg.inc(f"phase.{name}.compiles", stats.compiles)
+            reg.observe(f"phase.{name}.compile_wall_s", stats.wall_s)
+        else:
+            reg.observe(f"phase.{name}.wall_s", stats.wall_s)
+        reg.set_gauge(f"phase.{name}.live_bytes", stats.live_bytes)
+        sp.end(compiles=stats.compiles,
+               wall_ms=round(stats.wall_s * 1e3, 3),
+               live_bytes=stats.live_bytes)

@@ -171,17 +171,25 @@ class LeaseDir:
     def _path(self, task_id: str) -> str:
         return os.path.join(self.root, task_id + ".lease")
 
-    def claim(self, task_id: str, owner: str) -> bool:
-        """Try to claim `task_id` for `owner`; True iff we won the file."""
+    def claim(self, task_id: str, owner: str,
+              meta: Optional[dict] = None) -> bool:
+        """Try to claim `task_id` for `owner`; True iff we won the file.
+
+        `meta` (optional, JSON-able) is merged into the lease body —
+        `repro.fleet` workers carry their trace/span ids here, so the
+        owner of a chunk is joinable to its `repro.obs` trace from
+        coordination state alone."""
         os.makedirs(self.root, exist_ok=True)
         try:
             fd = os.open(self._path(task_id),
                          os.O_CREAT | os.O_EXCL | os.O_WRONLY)
         except FileExistsError:
             return False
+        body = {"owner": owner, "pid": os.getpid(), "t_claim": time.time()}
+        if meta:
+            body.update(meta)
         with os.fdopen(fd, "w") as f:
-            json.dump({"owner": owner, "pid": os.getpid(),
-                       "t_claim": time.time()}, f)
+            json.dump(body, f)
         return True
 
     def heartbeat(self, task_id: str):

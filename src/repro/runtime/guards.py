@@ -84,7 +84,15 @@ def no_retrace(allowed: int = 0,
             if delta > 0:
                 deltas.append(f"{fam}.{key}: +{delta}")
                 new += delta
+    # stream the observation into the process obs registry (lazy import:
+    # guards must stay importable without the obs package loaded first)
+    from ..obs.registry import get_registry
+    reg = get_registry()
+    reg.inc("guards.no_retrace.blocks")
+    if new:
+        reg.inc("guards.no_retrace.compiles", new)
     if new > allowed:
+        reg.inc("guards.no_retrace.violations")
         where = f" in {label}" if label else ""
         raise RetraceError(
             f"{new} compilation(s){where} where at most {allowed} "

@@ -19,6 +19,8 @@ from typing import List, Optional, Sequence, Union
 
 import numpy as np
 
+from ..obs.jaxprof import phase as obs_phase
+from ..obs.registry import get_registry, labeled
 from ..runtime.guards import check_result_finite, no_retrace
 from ..sim import SimRequest, SimResult
 from .cache import ResultCache, result_key
@@ -156,6 +158,12 @@ class SweepRunner:
                     results[i], cached[i] = hit, True
 
         miss = [i for i, r in enumerate(results) if r is None]
+        reg = get_registry()
+        if use_cache:
+            reg.inc(labeled("sweep.cache_hits", backend=self.backend.name),
+                    len(specs) - len(miss))
+            reg.inc(labeled("sweep.cache_misses", backend=self.backend.name),
+                    len(miss))
         fleet_metrics = None
         if miss and self.fleet is not None and use_cache:
             fleet_metrics = self._run_fleet(name, specs, requests, keys,
@@ -171,7 +179,10 @@ class SweepRunner:
             # more means a static arg or padding shape varied mid-sweep
             chunks = 1 if not self.chunk_size else \
                 -(-len(miss) // self.chunk_size)
-            with no_retrace(allowed=chunks, label=f"sweep '{name}'"):
+            with obs_phase("sweep.simulate",
+                           attrs={"backend": self.backend.name,
+                                  "n": len(miss)}), \
+                    no_retrace(allowed=chunks, label=f"sweep '{name}'"):
                 fresh = self.backend.run_chunked([requests[i] for i in miss],
                                                  self.chunk_size)
             for i, res in zip(miss, fresh):
@@ -201,7 +212,10 @@ class SweepRunner:
         if not _pool_usable():
             chunks = 1 if not self.chunk_size else \
                 -(-len(miss) // self.chunk_size)
-            with no_retrace(allowed=chunks, label=f"sweep '{name}'"):
+            with obs_phase("sweep.simulate",
+                           attrs={"backend": self.backend.name,
+                                  "n": len(miss)}), \
+                    no_retrace(allowed=chunks, label=f"sweep '{name}'"):
                 fresh = self.backend.run_chunked([requests[i] for i in miss],
                                                  self.chunk_size)
             for i, res in zip(miss, fresh):

@@ -86,11 +86,25 @@ def smoke(args, log=print) -> int:
         log(f"[serve --smoke] {phase} pass done")
 
     metrics = client.metrics()
+    prom_error = ""
+    try:
+        from ..obs.export import lookup, parse_prometheus
+        parsed = parse_prometheus(client.metrics_prometheus())
+        prom_total = lookup(parsed, "repro_serve_completed_total")
+        if prom_total is None or int(prom_total) != metrics["completed"]:
+            prom_error = (f"completed mismatch: prometheus={prom_total} "
+                          f"json={metrics['completed']}")
+        if lookup(parsed, "repro_serve_queue_depth",
+                  lane=backend) is None:
+            prom_error = prom_error or "missing per-lane queue_depth gauge"
+    except Exception as exc:
+        prom_error = f"{type(exc).__name__}: {exc}"
     server.shutdown()
     server.server_close()
     service.close()
     log("[serve --smoke] metrics: "
-        + json.dumps({k: v for k, v in metrics.items() if k != "lanes"},
+        + json.dumps({k: v for k, v in metrics.items()
+                      if k not in ("lanes", "obs")},
                      indent=1, sort_keys=True))
 
     checks = {
@@ -104,7 +118,10 @@ def smoke(args, log=print) -> int:
         "p99 queue delay finite":
             math.isfinite(metrics["queue_delay_p99_ms"]),
         "batches flushed": metrics["batches"] >= 1,
+        "prometheus /metrics round-trips": not prom_error,
     }
+    if prom_error:
+        log(f"[serve --smoke] prometheus error: {prom_error}")
     failed = [name for name, ok in checks.items() if not ok]
     for e in errors[:8]:
         log(f"[serve --smoke] client error: {e}")
@@ -137,7 +154,7 @@ def serve_forever(args, log=print) -> int:
     service.close(drain=True)
     log("[serve] metrics at exit: "
         + json.dumps({k: v for k, v in service.metrics().items()
-                      if k != "lanes"}, sort_keys=True))
+                      if k not in ("lanes", "obs")}, sort_keys=True))
     return 0
 
 

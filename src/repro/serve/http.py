@@ -13,7 +13,10 @@ serialize flow lists or numpy arrays.
         -> 400 malformed body / unknown spec field or backend
         -> 503 ServiceOverloaded (Retry-After header) or service closed
         -> 504 request sat queued past its deadline
-    GET  /metrics    -> 200 ServiceMetrics snapshot (see serve.metrics)
+    GET  /metrics    -> 200 ServiceMetrics snapshot (see serve.metrics);
+                        Prometheus text format (version 0.0.4) when the
+                        Accept header asks for text/plain or the query
+                        string says ?format=prometheus
     GET  /healthz    -> 200 {"ok": true, "status": "ok", ...} healthy;
                         503 with status "degraded" (a lane's dispatcher
                         thread died) or "closed"
@@ -30,12 +33,16 @@ import threading
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 from typing import Optional
 from urllib.error import HTTPError
+from urllib.parse import parse_qs, urlsplit
 from urllib.request import Request, urlopen
 
 from ..scenarios.spec import ScenarioSpec
 from ..sim import SimRequest
+from .metrics import prometheus_text
 from .service import (RequestTimeout, ServiceClosed, ServiceOverloaded,
                       SimService)
+
+PROMETHEUS_CONTENT_TYPE = "text/plain; version=0.0.4; charset=utf-8"
 
 # simulations can legitimately take a long first call (XLA compile);
 # handler threads wait this long on the future before giving up
@@ -83,10 +90,36 @@ class _Handler(BaseHTTPRequestHandler):
         self.end_headers()
         self.wfile.write(raw)
 
+    def _send_text(self, code: int, text: str, content_type: str):
+        raw = text.encode()
+        self.send_response(code)
+        self.send_header("Content-Type", content_type)
+        self.send_header("Content-Length", str(len(raw)))
+        self.end_headers()
+        self.wfile.write(raw)
+
+    def _wants_prometheus(self, query: dict) -> bool:
+        fmt = query.get("format") or []
+        if "prometheus" in fmt:
+            return True
+        if "json" in fmt:
+            return False
+        accept = self.headers.get("Accept", "")
+        return ("text/plain" in accept
+                or "application/openmetrics-text" in accept)
+
     def do_GET(self):
         service: SimService = self.server.service
-        if self.path == "/metrics":
-            self._send(200, service.metrics())
+        url = urlsplit(self.path)
+        if url.path == "/metrics":
+            # content negotiation: JSON stays the default (existing
+            # clients), Prometheus scrape config opts in via Accept or
+            # ?format=prometheus
+            if self._wants_prometheus(parse_qs(url.query)):
+                self._send_text(200, prometheus_text(service.metrics()),
+                                PROMETHEUS_CONTENT_TYPE)
+            else:
+                self._send(200, service.metrics())
         elif self.path == "/healthz":
             health = service.health()
             # degraded/closed -> 503 so LB health checks route away
@@ -187,6 +220,13 @@ class ServeClient:
 
     def metrics(self) -> dict:
         return self._call("/metrics")
+
+    def metrics_prometheus(self) -> str:
+        """The /metrics body in Prometheus text format (raw text)."""
+        req = Request(self.base_url + "/metrics?format=prometheus",
+                      headers={"Accept": "text/plain"})
+        with urlopen(req, timeout=self.timeout_s) as resp:
+            return resp.read().decode()
 
     def health(self) -> dict:
         """The /healthz body. A degraded or closed service answers 503

@@ -46,10 +46,12 @@ from __future__ import annotations
 
 import hashlib
 import threading
+import time
 from concurrent.futures import Future, InvalidStateError
 from dataclasses import dataclass, field
 from typing import Dict, List, Mapping, Optional, Tuple, Union
 
+from ..obs.trace import NULL_SPAN, get_tracer
 from ..runtime.guards import NonFiniteError, check_result_finite, no_retrace
 from ..scenarios.cache import ResultCache, result_key
 from ..sim import Backend, SimRequest, SimResult
@@ -122,6 +124,10 @@ class _Pending:
     enqueue_t: float
     deadline: Optional[float]
     futures: List[Future] = field(default_factory=list)
+    # trace spans (no-ops when tracing is off): the request's root span
+    # and its in-queue child, ended when the batch picks the request up
+    span: object = NULL_SPAN
+    q_span: object = NULL_SPAN
 
 
 class _Lane:
@@ -180,6 +186,7 @@ class SimService:
         self._closed = False
         self._drain = True
         self._exec_lock = threading.Lock()   # serializes guarded run_many
+        self._tracer = get_tracer()          # no-op unless REPRO_TRACE_DIR
         self._trace0 = _trace_total()
         self._lanes: Dict[str, _Lane] = {}
         for name, backend in backends.items():
@@ -210,49 +217,74 @@ class SimService:
                                 "flow request rejected")
         lane.metrics.count("submitted")
         key = result_key(request, lane.backend)
+        # spans are NULL_SPAN singletons when tracing is off — the hot
+        # path then does no id generation, timestamping, or I/O
+        root = self._tracer.start(
+            "serve.request",
+            attrs={"lane": lane.name, "num_flows": request.num_flows})
+        admit = self._tracer.start("serve.admit", parent=root)
         fut: Future = Future()
-        use_cache = self._cache is not None and not request.record_events
-        if use_cache:
-            hit = self._cache.get(key)
-            if hit is not None:
-                lane.metrics.count("cache_hits")
-                lane.metrics.count("completed")
-                fut.set_result(hit)
-                return fut
-        if timeout is None:
-            timeout = self.config.default_timeout_s
-        now = self._clock.now()
-        with lane.cond:
-            if self._closed:
-                raise ServiceClosed("service is closed")
-            pending = lane.inflight.get(key)
-            if pending is not None:
-                pending.futures.append(fut)
-                lane.metrics.count("coalesced")
-                return fut
-            if lane.queued >= self.config.max_queue:
-                lane.metrics.count("rejected")
-                raise ServiceOverloaded(
-                    lane.name, lane.queued,
-                    retry_after_jitter(self.config.flush_interval_s, key))
-            pending = _Pending(
-                request=request, key=key, bucket=self._bucket_key(request),
-                enqueue_t=now,
-                deadline=None if timeout is None else now + timeout,
-                futures=[fut])
-            lane.inflight[key] = pending
-            lane.buckets.setdefault(pending.bucket, []).append(pending)
-            lane.queued += 1
-            lane.cond.notify_all()
-        return fut
+        try:
+            use_cache = self._cache is not None and not request.record_events
+            if use_cache:
+                hit = self._cache.get(key)
+                if hit is not None:
+                    lane.metrics.count("cache_hits")
+                    lane.metrics.count("completed")
+                    fut.set_result(hit)
+                    admit.end()
+                    root.end(status="cache-hit")
+                    return fut
+            if timeout is None:
+                timeout = self.config.default_timeout_s
+            now = self._clock.now()
+            with lane.cond:
+                if self._closed:
+                    raise ServiceClosed("service is closed")
+                pending = lane.inflight.get(key)
+                if pending is not None:
+                    pending.futures.append(fut)
+                    lane.metrics.count("coalesced")
+                    admit.end()
+                    root.end(status="coalesced")
+                    return fut
+                if lane.queued >= self.config.max_queue:
+                    lane.metrics.count("rejected")
+                    raise ServiceOverloaded(
+                        lane.name, lane.queued,
+                        retry_after_jitter(self.config.flush_interval_s,
+                                           key))
+                admit.end()
+                pending = _Pending(
+                    request=request, key=key,
+                    bucket=self._bucket_key(request),
+                    enqueue_t=now,
+                    deadline=None if timeout is None else now + timeout,
+                    futures=[fut])
+                pending.span = root
+                pending.q_span = self._tracer.start("serve.queue",
+                                                    parent=root)
+                lane.inflight[key] = pending
+                lane.buckets.setdefault(pending.bucket, []).append(pending)
+                lane.queued += 1
+                lane.cond.notify_all()
+            return fut
+        except BaseException as exc:
+            admit.end()
+            root.end(status=f"error:{type(exc).__name__}")
+            raise
 
     def metrics(self, backend: Optional[str] = None) -> dict:
         """Metrics snapshot: one lane's block, or the aggregate with a
         per-lane breakdown under "lanes". "compiles" is the process-wide
         XLA compile count since the service started."""
         compiles = _trace_total() - self._trace0
-        per_lane = {name: lane.metrics.snapshot(compiles=compiles)
-                    for name, lane in self._lanes.items()}
+        per_lane = {
+            name: lane.metrics.snapshot(
+                compiles=compiles, queue_depth=lane.queued,
+                dispatcher_alive=(lane.thread is not None
+                                  and lane.thread.is_alive()))
+            for name, lane in self._lanes.items()}
         if backend is not None:
             return per_lane[self._lane(backend).name]
         agg = merge_snapshots(per_lane)
@@ -280,6 +312,8 @@ class SimService:
                         self._fail(lane, p.futures,
                                    ServiceClosed("service closed before "
                                                  "this request was run"))
+                        p.q_span.end(status="closed")
+                        p.span.end(status="closed")
                 lane.cond.notify_all()
         for lane in self._lanes.values():
             if lane.thread is not None and lane.thread.is_alive() \
@@ -382,6 +416,8 @@ class SimService:
                     f"request queued {now - p.enqueue_t:.3f}s, past its "
                     f"deadline, and was never simulated"),
                     counter="timed_out")
+                p.q_span.end(status="timeout")
+                p.span.end(status="timeout")
 
     def _pick_batch_locked(self, lane: _Lane) -> Optional[List[_Pending]]:
         """The oldest bucket that is full, past its flush deadline, or —
@@ -423,14 +459,18 @@ class SimService:
 
     def _run_batch(self, lane: _Lane, batch: List[_Pending]):
         t_flush = self._clock.now()
+        tracing = self._tracer.enabled
+        t_flush_wall = time.time() if tracing else 0.0
         live: List[Tuple[_Pending, List[Future]]] = []
         for p in batch:
             lane.metrics.observe_queue_delay(t_flush - p.enqueue_t)
+            p.q_span.end()
             futs = [f for f in p.futures if f.set_running_or_notify_cancel()]
             if futs:
                 live.append((p, futs))
             else:
                 lane.metrics.count("cancelled")
+                p.span.end(status="cancelled")
         if not live:
             return
         requests = [p.request for p, _ in live]
@@ -439,8 +479,16 @@ class SimService:
             n_pad = self.config.batch_size - len(requests)
             requests = requests + [requests[0]] * n_pad
         shape = (live[0][0].bucket, len(requests))
+        if tracing:
+            t_ready = time.time()
+            for p, _ in live:
+                self._tracer.emit_span(
+                    "serve.flush", p.span, t_flush_wall, t_ready,
+                    attrs={"batch": len(live), "padded": n_pad})
+        windows: List[Tuple[str, float, float]] = []
         try:
-            results = self._execute(lane, requests, shape)[:len(live)]
+            results = self._execute(lane, requests, shape,
+                                    windows)[:len(live)]
         except Exception:
             # the batch as a whole failed — isolate per request so one
             # poisoned scenario can't take its flush-mates down with it
@@ -449,24 +497,55 @@ class SimService:
         lane.metrics.count("batches")
         lane.metrics.count("batched_requests", len(live))
         lane.metrics.count("padded_requests", n_pad)
+        if tracing:
+            for p, _ in live:
+                for name, w0, w1 in windows:
+                    self._tracer.emit_span(name, p.span, w0, w1)
         for (p, futs), res in zip(live, results):
             self._deliver(lane, p, futs, res)
 
+    def _timed_run(self, lane: _Lane, requests: List[SimRequest],
+                   windows: List[Tuple[str, float, float]],
+                   name: str) -> List[SimResult]:
+        t0 = time.time()
+        results = lane.backend.run_many(requests)
+        windows.append((name, t0, time.time()))
+        return results
+
     def _execute(self, lane: _Lane, requests: List[SimRequest],
-                 shape) -> List[SimResult]:
+                 shape, windows=None) -> List[SimResult]:
         """run_many under the compile guard: the first flush of a shape
         may compile; every later one must not (`no_retrace(allowed=0)`).
         Guarded flushes serialize on one lock because the compile
         counters are process-global — two lanes compiling concurrently
-        would read each other's traces as budget violations."""
+        would read each other's traces as budget violations.
+
+        `windows` (tracing only) collects named wall-clock windows: a
+        first-flush-of-shape records `serve.compile`, then — so the
+        trace separates compile wall from steady wall — re-runs the
+        (pure, now-compiled) batch once as the `serve.run` window.
+        Warm flushes record a single `serve.run` window."""
+        tracing = windows is not None and self._tracer.enabled
         if not self.config.guard_retrace:
+            if tracing:
+                return self._timed_run(lane, requests, windows, "serve.run")
             return lane.backend.run_many(requests)
         with self._exec_lock:
             if shape in lane.compiled_shapes:
                 with no_retrace(allowed=0,
                                 label=f"serve lane '{lane.name}' "
                                       f"shape {shape}"):
+                    if tracing:
+                        return self._timed_run(lane, requests, windows,
+                                               "serve.run")
                     return lane.backend.run_many(requests)
+            if tracing:
+                results = self._timed_run(lane, requests, windows,
+                                          "serve.compile")
+                lane.compiled_shapes.add(shape)
+                results = self._timed_run(lane, requests, windows,
+                                          "serve.run")
+                return results
             results = lane.backend.run_many(requests)
             lane.compiled_shapes.add(shape)
             return results
@@ -481,6 +560,7 @@ class SimService:
                 res = lane.backend.run(p.request)
             except Exception as exc:
                 self._fail(lane, futs, exc)
+                p.span.end(status=f"error:{type(exc).__name__}")
                 continue
             self._deliver(lane, p, futs, res)
 
@@ -491,6 +571,7 @@ class SimService:
             check_result_finite(f"serve:{lane.name}", res)
         except NonFiniteError as exc:
             self._fail(lane, futs, exc)
+            p.span.end(status="nonfinite")
             return
         if self._cache is not None and not p.request.record_events:
             self._cache.put(p.key, res)
@@ -500,3 +581,4 @@ class SimService:
                 lane.metrics.count("completed")
             except InvalidStateError:
                 lane.metrics.count("cancelled")
+        p.span.end()

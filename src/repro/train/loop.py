@@ -43,6 +43,8 @@ import numpy as np
 from ..core.events import EventBatch
 from ..core.model import M4Config, init_m4
 from ..core.training import event_scan_losses
+from ..obs.registry import get_registry
+from ..obs.trace import get_tracer
 from ..optim import adamw_init, adamw_update, clip_by_global_norm
 from ..optim.schedules import linear_warmup_cosine
 from ..runtime import checkpoint as ckpt
@@ -283,8 +285,14 @@ def fit(batches: Sequence[EventBatch], m4cfg: M4Config,
     """Train m4 on a corpus of `EventBatch`es; returns (state, history).
 
     history is one dict per epoch: {epoch, loss, sldn, size, queue, lr,
-    grad_norm, wall_s[, eval]} — `loss` is the sim-weighted epoch mean of
-    the combined objective, the per-head entries its components.
+    grad_norm, wall_s, compile_s, step_s, compiles[, eval]} — `loss` is
+    the sim-weighted epoch mean of the combined objective, the per-head
+    entries its components. `wall_s` splits into `compile_s` (bucket
+    steps that triggered an XLA trace, i.e. cold shapes) and `step_s`
+    (steady-state steps); both include the device->host sync, so they
+    sum to the loop's true wall. The same split streams into the
+    process `repro.obs` registry (`train.compile_wall_s` /
+    `train.step_wall_s` histograms) for `train_suite`'s report.
 
     With `tc.ckpt_dir` set, the run checkpoints every `ckpt_every`
     epochs and AUTO-RESUMES: if a committed checkpoint exists, training
@@ -340,9 +348,12 @@ def fit(batches: Sequence[EventBatch], m4cfg: M4Config,
     # jit, so a shape can hit two targets). eval_fn compiles in the
     # simulate counter family, which this guard deliberately excludes —
     # those are budgeted where the sweep wraps them.
+    reg = get_registry()
+    tracer = get_tracer()
     with no_retrace(allowed=2 * len(shapes),
                     counters={"train.loop": TRACE_COUNTS}, label="fit"):
         for ep in range(start_epoch, tc.epochs):
+            ep_span = tracer.span("train.epoch", attrs={"epoch": ep})
             t0 = time.perf_counter()
             order = np.arange(len(buckets), dtype=np.int64)
             if tc.shuffle:
@@ -352,15 +363,33 @@ def fit(batches: Sequence[EventBatch], m4cfg: M4Config,
                 order = np.asarray(jax.random.permutation(
                     jax.random.fold_in(rng, ep), len(buckets)))
             outs_all, weights = [], []
+            compile_s = step_s = 0.0
+            ep_compiles = 0
             for bi in order:
                 b = buckets[int(bi)]
+                c0 = sum(TRACE_COUNTS.values())
+                ts = time.perf_counter()
                 params, opt, outs = step_fn(params, opt, b.arrays)
+                # the host transfer blocks on the device computation, so
+                # keeping it inside the window times the true step wall
                 outs = np.asarray(outs)
+                dt = time.perf_counter() - ts
+                new_traces = sum(TRACE_COUNTS.values()) - c0
+                if new_traces:
+                    compile_s += dt
+                    ep_compiles += new_traces
+                else:
+                    step_s += dt
                 check_finite(f"train step outs (epoch {ep})", outs)
                 outs_all.append(outs)
                 # per_sim: one row per sim; batch: one bucket-mean row
                 weights.append(np.full(len(outs), b.size / len(outs),
                                        np.float64))
+            reg.inc("train.steps", len(order))
+            if ep_compiles:
+                reg.inc("train.compiles", ep_compiles)
+                reg.observe("train.compile_wall_s", compile_s)
+            reg.observe("train.step_wall_s", step_s)
             outs = np.concatenate(outs_all)
             w = np.concatenate(weights)
             mean = (outs * w[:, None]).sum(0) / w.sum()
@@ -368,7 +397,10 @@ def fit(batches: Sequence[EventBatch], m4cfg: M4Config,
                      "sldn": float(mean[1]), "size": float(mean[2]),
                      "queue": float(mean[3]), "lr": float(outs[-1, 4]),
                      "grad_norm": float(mean[5]),
-                     "wall_s": round(time.perf_counter() - t0, 3)}
+                     "wall_s": round(time.perf_counter() - t0, 3),
+                     "compile_s": round(compile_s, 3),
+                     "step_s": round(step_s, 3),
+                     "compiles": ep_compiles}
             if eval_fn is not None and eval_every and \
                     ((ep + 1) % eval_every == 0 or ep + 1 == tc.epochs):
                 entry["eval"] = eval_fn(params)
@@ -376,7 +408,12 @@ def fit(batches: Sequence[EventBatch], m4cfg: M4Config,
             log(f"[train] epoch {ep}: loss={entry['loss']:.4f} "
                 f"(sldn={entry['sldn']:.4f} size={entry['size']:.4f} "
                 f"queue={entry['queue']:.4f}) lr={entry['lr']:.2e} "
-                f"{entry['wall_s']:.1f}s")
+                f"{entry['wall_s']:.1f}s"
+                + (f" (compile {entry['compile_s']:.1f}s)"
+                   if ep_compiles else ""))
+            ep_span.end(loss=entry["loss"], compiles=ep_compiles,
+                        compile_s=entry["compile_s"],
+                        step_s=entry["step_s"])
             if tc.ckpt_dir and ((ep + 1) % tc.ckpt_every == 0
                                 or ep + 1 == tc.epochs):
                 tree = {"params": params, "opt": opt, "rng": rng}
@@ -468,7 +505,14 @@ def train_suite(suite, m4cfg: M4Config, tc: TrainConfig = TrainConfig(), *,
                     "hits": data_report.hits, "misses": data_report.misses,
                     "root": data_root},
         "train": {"epochs": history, "compiles": compiles,
-                  "updates": state.step},
+                  "updates": state.step,
+                  # run-level compile-vs-steady wall split (sums of the
+                  # per-epoch entries; epochs resumed from a checkpoint
+                  # contribute their recorded walls)
+                  "compile_s": round(sum(e.get("compile_s", 0.0)
+                                         for e in history), 3),
+                  "step_s": round(sum(e.get("step_s", 0.0)
+                                      for e in history), 3)},
         "weights_hash": state.weights_hash(),
     }
     if eval_specs:
@@ -479,6 +523,10 @@ def train_suite(suite, m4cfg: M4Config, tc: TrainConfig = TrainConfig(), *,
             f"{e['baseline']} {e[e['baseline'] + '_err_mean']:.3f} "
             f"({'beats' if e['m4_beats_baseline'] else 'LOSES TO'} baseline)")
     report["wall_s"] = round(time.perf_counter() - t0, 2)
+    # the process repro.obs snapshot (train.* histograms + any sweep/eval
+    # counters) rides along in train_log.json, so
+    # `python -m repro.obs --merge results/train_log.json` just works
+    report["obs"] = get_registry().snapshot()
     return state, report
 
 
