@@ -5,12 +5,14 @@ seed program preserved behind ``snapshot_impl="dense"`` — the
 "current-main" baseline the speedup is claimed against) and the
 flowsim_fast event scan, at arena sizes N in {256, 1024, 4096} on
 proportionally grown fat-trees, plus the end-to-end throughput of the
-`repro.serve` dynamic-batching service (``measure_serve``). Results land
-in ``BENCH_m4.json``, ``BENCH_flowsim_fast.json``, and
-``BENCH_serve.json`` at the repo root; committing them gives the repo a
-perf trajectory, and the CI job replays ``--check`` against the
-committed files (``--only serve`` runs just the service benchmark, as
-the CI serve-smoke job does).
+`repro.serve` dynamic-batching service (``measure_serve``), plus the
+deterministic m4-vs-flowSim *accuracy* profile (``measure_accuracy``,
+via `repro.obs.diff`). Results land in ``BENCH_m4.json``,
+``BENCH_flowsim_fast.json``, ``BENCH_serve.json``, and
+``BENCH_accuracy.json`` at the repo root; committing them gives the repo
+a perf + accuracy trajectory, and the CI jobs replay ``--check`` against
+the committed files (``--only serve`` / ``--only accuracy`` run just
+that benchmark, as the serve-smoke / accuracy-gate jobs do).
 
 Methodology
 -----------
@@ -246,6 +248,90 @@ def measure_serve(reps=3, log=print):
             "entries": [e]}
 
 
+def measure_accuracy(scenarios=6, num_flows=24, log=print):
+    """m4-vs-flowSim per-flow accuracy on fixed smoke scenarios, as data.
+
+    Runs the deterministic gate-scale m4 (untrained, PRNGKey(0) — the
+    committed numbers are a *fixture*, not a quality claim) and the
+    flowsim_fast baseline through `repro.obs.diff.diff_sweep` on the
+    first `scenarios` smoke16 specs, with probes on both sides so the
+    report also carries intermediate-state series distances. Unlike the
+    timing benchmarks, every number here is a simulation output: it
+    reproduces bit-for-bit on any host, so `check_accuracy` gates
+    cross-host with no hostname escape hatch."""
+    import jax
+    from repro.core.model import init_m4
+    from repro.core.probes import ProbeConfig
+    from repro.obs.diff import diff_sweep
+    from repro.scenarios.suites import get_suite
+    from repro.sim import get_backend
+
+    cfg = _gate_cfg()
+    m4 = get_backend("m4", params=init_m4(jax.random.PRNGKey(0), cfg),
+                     cfg=cfg)
+    base = get_backend("flowsim_fast")
+    suite = get_suite("smoke16", num_flows=num_flows).limit(scenarios)
+    report = diff_sweep(suite, m4, base, cache_dir=None, chunk_size=None,
+                        probes=ProbeConfig(stride=4, max_samples=64))
+    entries = []
+    for p in sorted(report["profiles"], key=lambda p: p["label"]):
+        e = {"scenario": p["label"], "flows": p["num_flows"],
+             "mean_rel_err": round(p["mean_rel_err"], 4),
+             "p90_rel_err": round(p["p90_rel_err"], 4),
+             "sldn_p99_delta": round(p["sldn_delta"]["p99"], 4),
+             "probe_distance": {k: round(v, 4)
+                                for k, v in sorted(
+                                    p["probe_distance"].items())}}
+        entries.append(e)
+        log(f"[accuracy] {e['scenario']:<12} flows={e['flows']:3d}  "
+            f"mean={e['mean_rel_err']:.4f}  p90={e['p90_rel_err']:.4f}  "
+            f"sldn_p99_d={e['sldn_p99_delta']:+.3f}")
+    s = report["summary"]
+    log(f"[accuracy] pooled over {s['flows']} flows: "
+        f"mean={s['mean_rel_err']:.4f}  p90={s['p90_rel_err']:.4f}")
+    return {"benchmark": "accuracy",
+            "config": _cfg_dict(cfg), "oracle": "flowsim_fast",
+            "suite": {"name": "smoke16", "scenarios": scenarios,
+                      "num_flows": num_flows},
+            "summary": {"mean_rel_err": s["mean_rel_err"],
+                        "p90_rel_err": s["p90_rel_err"],
+                        "flows": s["flows"]},
+            "entries": entries}
+
+
+def check_accuracy(report, baseline, tolerance=0.2, log=print):
+    """Accuracy gate: structure everywhere, error levels with tolerance.
+
+    Structural (exact): same scenario set and per-scenario flow counts —
+    a changed suite silently invalidates the comparison. Gated: the
+    flow-pooled mean and p90 relative error may not exceed the committed
+    baseline by more than `tolerance` (cross-host — these are
+    deterministic simulation outputs, not timings)."""
+    failures = []
+    base_by = {e["scenario"]: e for e in baseline.get("entries", [])}
+    new_by = {e["scenario"]: e for e in report.get("entries", [])}
+    if sorted(base_by) != sorted(new_by):
+        failures.append(
+            f"accuracy: scenario set changed — baseline {sorted(base_by)} "
+            f"vs {sorted(new_by)} (re-commit BENCH_accuracy.json)")
+    for label in sorted(set(base_by) & set(new_by)):
+        if new_by[label]["flows"] != base_by[label]["flows"]:
+            failures.append(
+                f"accuracy {label}: {new_by[label]['flows']} flows != "
+                f"baseline {base_by[label]['flows']}")
+    s, bs = report.get("summary") or {}, baseline.get("summary") or {}
+    for k in ("mean_rel_err", "p90_rel_err"):
+        if k not in s or k not in bs:
+            failures.append(f"accuracy: summary missing {k!r}")
+            continue
+        lim = bs[k] * (1 + tolerance) + 1e-9
+        if s[k] > lim:
+            failures.append(
+                f"accuracy {k}: {s[k]:.4f} > {lim:.4f} "
+                f"(baseline {bs[k]:.4f} + {tolerance:.0%})")
+    return failures
+
+
 def check_serve(report, baseline, tolerance=0.2, log=print):
     """Serve gate: structural facts everywhere, throughput same-host.
 
@@ -374,7 +460,7 @@ def main(argv=None):
                     help="where BENCH_*.json live")
     ap.add_argument("--only", default="",
                     help="comma-separated subset of benchmarks to run "
-                         "(m4, flowsim_fast, serve; default: all)")
+                         "(m4, flowsim_fast, serve, accuracy; default: all)")
     args = ap.parse_args(argv)
 
     benches = {
@@ -384,6 +470,7 @@ def main(argv=None):
             measure_flowsim_fast(events=max(32, args.events // 2),
                                  reps=args.reps)),
         "BENCH_serve.json": ("serve", lambda: measure_serve(reps=args.reps)),
+        "BENCH_accuracy.json": ("accuracy", lambda: measure_accuracy()),
     }
     only = {s for s in args.only.split(",") if s}
     unknown = only - {name for name, _ in benches.values()}
@@ -403,7 +490,9 @@ def main(argv=None):
                 continue
             with open(path) as fh:
                 baseline = json.load(fh)
-            checker = check_serve if report["benchmark"] == "serve" else check
+            checker = {"serve": check_serve,
+                       "accuracy": check_accuracy}.get(
+                report["benchmark"], check)
             failures += checker(report, baseline, args.tolerance)
         else:
             with open(path, "w") as fh:

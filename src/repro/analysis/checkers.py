@@ -345,7 +345,7 @@ class HostSyncChecker(Checker):
     silent constant-folding bug, so `.item()/.tolist()/float()/int()/np.*`
     calls there are flagged everywhere. In the hot-path packages
     (configured via `hot_prefixes`, default core/ kernels/ sim/ serve/
-    obs/) even
+    obs/ fleet/ scenarios/) even
     *untraced* per-event pulls are flagged — PR 3's `next_departure` work
     existed precisely because one `(N,)` host pull per event dominated the
     closed-loop budget.
@@ -357,7 +357,8 @@ class HostSyncChecker(Checker):
 
     def __init__(self, hot_prefixes: Sequence[str] = (
             "src/repro/core/", "src/repro/kernels/", "src/repro/sim/",
-            "src/repro/serve/", "src/repro/obs/")):
+            "src/repro/serve/", "src/repro/obs/", "src/repro/fleet/",
+            "src/repro/scenarios/")):
         self.hot_prefixes = tuple(hot_prefixes)
 
     def check(self, mod: ModuleSource) -> Iterator[Finding]:
@@ -466,7 +467,8 @@ class DtypeDriftChecker(Checker):
     def __init__(self, prefixes: Sequence[str] = (
             "src/repro/core/", "src/repro/kernels/", "src/repro/train/",
             "src/repro/launch/", "src/repro/models/",
-            "src/repro/serve/", "src/repro/obs/")):
+            "src/repro/serve/", "src/repro/obs/", "src/repro/fleet/",
+            "src/repro/scenarios/")):
         self.prefixes = tuple(prefixes)
 
     def check(self, mod: ModuleSource) -> Iterator[Finding]:

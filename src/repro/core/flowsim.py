@@ -65,6 +65,8 @@ class FlowSimResult:
     event_types: np.ndarray
     event_fids: np.ndarray
     wallclock: float = 0.0
+    # `repro.obs.timeseries/1` dict when the fast path ran with a ProbeConfig
+    probes: Optional[dict] = None
 
 
 def run_flowsim(topo, flows, until: Optional[float] = None,

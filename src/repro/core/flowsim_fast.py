@@ -29,6 +29,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..kernels import dispatch
+from .probes import (FLOWSIM_CHANNELS, ProbeConfig,
+                     finalize as _probe_finalize, init_buffers as _probe_init,
+                     normalize_probes, record as _probe_record)
 
 BIG = 1e30
 
@@ -68,10 +71,10 @@ def _waterfill_masked(a, cap, active, *, max_rounds=32, mode="xla"):
 
 
 def _event_scan_core(a, cap, sizes_bits, arr_times, arr_order, mode="xla",
-                     num_events=None):
+                     num_events=None, probes=None):
     N = sizes_bits.shape[0]
 
-    def body(carry, _):
+    def step(carry):
         remaining, active, done, ptr, t, fct = carry
         rates = _waterfill_masked(a, cap, active, mode=mode)
         tta = jnp.where(active & (rates > 0), remaining / jnp.maximum(rates, 1e-9), BIG)
@@ -90,31 +93,56 @@ def _event_scan_core(a, cap, sizes_bits, arr_times, arr_order, mode="xla",
         remaining = remaining.at[fid].set(
             jnp.where(is_arr, sizes_bits[fid], 0.0))
         ptr = ptr + is_arr.astype(jnp.int32)
-        return (remaining, active, done, ptr, t_ev, fct), None
+        return (remaining, active, done, ptr, t_ev, fct)
+
+    def body(carry, _):
+        return step(carry), None
 
     init = (jnp.zeros((N,), jnp.float32), jnp.zeros((N,), bool),
             jnp.zeros((N,), bool), jnp.int32(0), 0.0,
             jnp.zeros((N,), jnp.float32))
     length = 2 * N if num_events is None else num_events
-    (remaining, active, done, ptr, t, fct), _ = jax.lax.scan(
-        body, init, None, length=length)
-    return fct  # completion TIMES (absolute); caller subtracts arrivals
+    if probes is None:
+        (remaining, active, done, ptr, t, fct), _ = jax.lax.scan(
+            body, init, None, length=length)
+        return fct  # completion TIMES (absolute); caller subtracts arrivals
+
+    bufs0 = _probe_init(probes, num_flows=N, num_links=a.shape[1])
+
+    def body_probed(carry, ev_idx):
+        inner, bufs = carry
+        inner = step(inner)
+        remaining, active, done, ptr, t_ev, fct = inner
+        vals = {
+            # instantaneous max-min rates of the post-event active set —
+            # an extra waterfill, but only inside the cond's taken branch
+            "flow_rate": lambda: _waterfill_masked(a, cap, active, mode=mode),
+            "flow_remaining": lambda: remaining / 8.0,          # bits -> bytes
+            "link_active": lambda: jnp.where(active, 1.0, 0.0) @ a,
+        }
+        bufs = _probe_record(probes, bufs, ev_idx, t_ev, vals)
+        return (inner, bufs), None
+
+    ((remaining, active, done, ptr, t, fct), bufs), _ = jax.lax.scan(
+        body_probed, (init, bufs0), jnp.arange(length, dtype=jnp.int32))
+    return fct, bufs
 
 
-@partial(jax.jit, static_argnames=("mode", "num_events"))
+@partial(jax.jit, static_argnames=("mode", "num_events", "probes"))
 def _event_scan(a, cap, sizes_bits, arr_times, arr_order, mode="xla",
-                num_events=None):
+                num_events=None, probes=None):
     TRACE_COUNTS["event_scan"] += 1
     return _event_scan_core(a, cap, sizes_bits, arr_times, arr_order, mode,
-                            num_events)
+                            num_events, probes)
 
 
-@partial(jax.jit, static_argnames=("mode",))
-def _event_scan_batched(a, cap, sizes_bits, arr_times, arr_order, mode="xla"):
+@partial(jax.jit, static_argnames=("mode", "probes"))
+def _event_scan_batched(a, cap, sizes_bits, arr_times, arr_order, mode="xla",
+                        probes=None):
     TRACE_COUNTS["event_scan_batched"] += 1
 
     def one(*leaves):
-        return _event_scan_core(*leaves, mode)
+        return _event_scan_core(*leaves, mode, None, probes)
 
     return jax.vmap(one)(a, cap, sizes_bits, arr_times, arr_order)
 
@@ -151,7 +179,7 @@ def _pack(topo, flows, n_total=None, l_total=None):
     return a, cap, sizes, t_arr[order], order
 
 
-def _result(topo, flows, fct_abs, wall):
+def _result(topo, flows, fct_abs, wall, series=None):
     from .flowsim import FlowSimResult
     arr = np.array([f.t_arrival for f in flows])
     fcts = fct_abs[:len(flows)] - arr
@@ -159,24 +187,49 @@ def _result(topo, flows, fct_abs, wall):
     return FlowSimResult(fcts=fcts, slowdowns=fcts / ideal,
                          event_times=np.zeros(0, np.float64),
                          event_types=np.zeros(0, np.float64),
-                         event_fids=np.zeros(0, np.float64), wallclock=wall)
+                         event_fids=np.zeros(0, np.float64), wallclock=wall,
+                         probes=series)
 
 
-def run_flowsim_fast(topo, flows):
-    """Drop-in fast path for `run_flowsim` (fcts + slowdowns only)."""
+def _finalize_fs_series(probes, bufs, topo, flows, *, num_flows, num_links):
+    series = _probe_finalize(probes, bufs, num_flows=num_flows,
+                             num_links=num_links, trim_flows=len(flows),
+                             trim_links=topo.num_links)
+    series["meta"] = {"backend": "flowsim_fast",
+                      "units": {"flow_rate": "bits/s",
+                                "flow_remaining": "bytes",
+                                "link_active": "flows"}}
+    return series
+
+
+def run_flowsim_fast(topo, flows, probes: ProbeConfig = None):
+    """Drop-in fast path for `run_flowsim` (fcts + slowdowns only).
+    `probes` records exact remaining-size / waterfill-rate / link-occupancy
+    series into `FlowSimResult.probes`; None is the probe-free program."""
+    probes = normalize_probes(probes, FLOWSIM_CHANNELS)
     a, cap, sizes, times, order = _pack(topo, flows)
     mode = dispatch.resolve_mode()
     t0 = time.perf_counter()
-    fct_abs = np.asarray(_event_scan(
+    out = jax.block_until_ready(_event_scan(
         jnp.asarray(a), jnp.asarray(cap), jnp.asarray(sizes),
-        jnp.asarray(times), jnp.asarray(order), mode=mode))
+        jnp.asarray(times), jnp.asarray(order), mode=mode, probes=probes))
     wall = time.perf_counter() - t0
-    return _result(topo, flows, fct_abs, wall)
+    series = None
+    if probes is None:
+        fct_abs = np.asarray(out)
+    else:
+        fct_abs = np.asarray(out[0])
+        series = _finalize_fs_series(probes, out[1], topo, flows,
+                                     num_flows=len(flows),
+                                     num_links=topo.num_links)
+    return _result(topo, flows, fct_abs, wall, series)
 
 
-def run_flowsim_fast_batch(scenarios):
+def run_flowsim_fast_batch(scenarios, probes: ProbeConfig = None):
     """One vmapped compile over B (topo, flows) scenarios padded to the
-    largest flow/link count. Returns a list of FlowSimResult."""
+    largest flow/link count. Returns a list of FlowSimResult. Probed
+    batches stay on the vmapped (single-device) path."""
+    probes = normalize_probes(probes, FLOWSIM_CHANNELS)
     scenarios = list(scenarios)
     if not scenarios:
         return []
@@ -188,12 +241,27 @@ def run_flowsim_fast_batch(scenarios):
     mode = dispatch.resolve_mode()
     D = jax.local_device_count()
     t0 = time.perf_counter()
-    if D > 1 and len(scenarios) >= D:
+    bufs = None
+    if D > 1 and len(scenarios) >= D and probes is None:
         from .sharding import shard_leaves, unshard
         fct_abs = unshard(np.asarray(_event_scan_sharded(
             *shard_leaves(stacked, D), mode)), len(scenarios))
     else:
-        fct_abs = np.asarray(_event_scan_batched(*stacked, mode=mode))
+        out = jax.block_until_ready(
+            _event_scan_batched(*stacked, mode=mode, probes=probes))
+        if probes is None:
+            fct_abs = np.asarray(out)
+        else:
+            fct_abs = np.asarray(out[0])
+            bufs = out[1]
     wall = time.perf_counter() - t0
-    return [_result(topo, flows, fct_abs[b], wall / len(scenarios))
-            for b, (topo, flows) in enumerate(scenarios)]
+    results = []
+    for b, (topo, flows) in enumerate(scenarios):
+        series = None
+        if bufs is not None:
+            series = _finalize_fs_series(
+                probes, {k: v[b] for k, v in bufs.items()}, topo, flows,
+                num_flows=n_max, num_links=l_max)
+        results.append(_result(topo, flows, fct_abs[b],
+                               wall / len(scenarios), series))
+    return results

@@ -1,0 +1,159 @@
+"""Device-resident simulation-state probes (ring buffers inside the scan).
+
+The paper's training signal is dense supervision on *intermediate* network
+state — remaining flow size and per-link queue length — but the open-loop
+entry points only ever surfaced terminal FCTs. A `ProbeConfig` asks the
+event scan to also record, every `stride`-th event, a sample of the
+simulator's belief about that intermediate state into preallocated
+ring-buffer arenas carried through `lax.scan`:
+
+- ``link_queue``      per-link predicted queue length (m4's MLP-queue head)
+- ``link_active``     per-link active-flow count (occupancy arenas / incidence)
+- ``flow_remaining``  per-flow remaining size (m4's MLP-size head; flowsim's
+                      exact residual)
+- ``flow_rate``       per-flow assigned max-min rate (flowsim waterfill)
+
+`ProbeConfig` is a frozen, hashable dataclass passed as a *static* jit
+argument: ``probes=None`` takes the exact pre-probe code path (same carry,
+same scan, same jaxpr — counter-asserted in tests/test_obs.py), and a
+probes-on call compiles a second program whose sampling cadence and channel
+set are baked in at trace time. Inside the scan the sample is taken under
+``lax.cond`` so non-sample events skip the read-out math entirely (under
+vmap the cond lowers to a select, so batched probing pays the read-out per
+event — the stride still bounds memory, not compute, there).
+
+Ring semantics: sample ``k`` (the k-th stride-hit) lands in slot
+``k % max_samples``; once the ring wraps, the buffer holds the *last*
+``max_samples`` samples and `finalize` rolls them back into chronological
+order on the host. Padded-arena events (arrival time >= BIG/2) are dropped
+at finalize, so batch-padded scenarios never leak junk samples.
+
+The finalized series dict is the wire format of `repro.obs.timeseries`
+(schema ``repro.obs.timeseries/1``); see src/repro/obs/timeseries.py for
+JSONL export, validation, and registry histograms.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+BIG = 1e30
+SCHEMA_TS = "repro.obs.timeseries/1"
+
+#: every channel any backend can record, in canonical order
+CHANNELS = ("link_queue", "link_active", "flow_remaining", "flow_rate")
+#: what each backend knows how to read out of its carry
+M4_CHANNELS = ("link_queue", "link_active", "flow_remaining")
+FLOWSIM_CHANNELS = ("link_active", "flow_remaining", "flow_rate")
+#: channel name prefix -> which axis the (S, D) sample dimension indexes
+LINK_CHANNELS = ("link_queue", "link_active")
+FLOW_CHANNELS = ("flow_remaining", "flow_rate")
+
+
+@dataclass(frozen=True)
+class ProbeConfig:
+    """Static probe spec: sampling stride (in events), ring capacity, and
+    the channel mask. Hashable so it participates in the jit cache key —
+    changing any field compiles a new program rather than branching at
+    runtime."""
+    stride: int = 1
+    max_samples: int = 256
+    channels: Tuple[str, ...] = CHANNELS
+
+    def __post_init__(self):
+        if self.stride < 1:
+            raise ValueError(f"probe stride must be >= 1, got {self.stride}")
+        if self.max_samples < 1:
+            raise ValueError(
+                f"probe max_samples must be >= 1, got {self.max_samples}")
+        bad = [c for c in self.channels if c not in CHANNELS]
+        if bad:
+            raise ValueError(f"unknown probe channels {bad}; valid: {CHANNELS}")
+        # canonical order + dedupe => equal configs hash equal
+        canon = tuple(c for c in CHANNELS if c in self.channels)
+        object.__setattr__(self, "channels", canon)
+
+
+def normalize_probes(probes: Optional[ProbeConfig],
+                     supported: Tuple[str, ...] = CHANNELS
+                     ) -> Optional[ProbeConfig]:
+    """Intersect the requested channels with what a backend supports;
+    an empty result normalizes to None (probes fully off) so entry points
+    branch on a single static `probes is None` check."""
+    if probes is None:
+        return None
+    chans = tuple(c for c in probes.channels if c in supported)
+    if not chans:
+        return None
+    return replace(probes, channels=chans)
+
+
+def init_buffers(probes: ProbeConfig, *, num_flows: int, num_links: int):
+    """Preallocated ring arenas carried through the scan. `ev` slots start
+    at -1 so never-written slots are identifiable on the host."""
+    import jax.numpy as jnp
+    S = probes.max_samples
+    bufs = {"t": jnp.zeros((S,), jnp.float32),
+            "ev": jnp.full((S,), -1, jnp.int32)}
+    for ch in probes.channels:
+        D = num_links if ch in LINK_CHANNELS else num_flows
+        bufs[ch] = jnp.zeros((S, D), jnp.float32)
+    return bufs
+
+
+def record(probes: ProbeConfig, bufs, ev_idx, t_ev, values: Dict[str, object]):
+    """Write one sample if `ev_idx` is a stride hit. `values` maps channel
+    name -> thunk producing the (D,) sample; thunks run only inside the
+    taken branch of the cond, so skipped events skip the read-out math."""
+    import jax
+    import jax.numpy as jnp
+    take = (ev_idx % probes.stride) == 0
+    slot = (ev_idx // probes.stride) % probes.max_samples
+
+    def write(b):
+        out = dict(b)
+        out["t"] = b["t"].at[slot].set(t_ev)
+        out["ev"] = b["ev"].at[slot].set(ev_idx)
+        for ch in probes.channels:
+            out[ch] = b[ch].at[slot].set(values[ch]())
+        return out
+
+    return jax.lax.cond(take, write, lambda b: b, bufs)
+
+
+def finalize(probes: ProbeConfig, bufs, *, num_flows: int, num_links: int,
+             trim_flows: Optional[int] = None,
+             trim_links: Optional[int] = None) -> Dict[str, object]:
+    """Host-side: unroll the ring into chronological order, drop unwritten
+    and padded-arena (t >= BIG/2) slots, trim channel dims to the real
+    per-scenario flow/link counts, and assemble the timeseries dict."""
+    t = np.asarray(bufs["t"], np.float64)
+    ev = np.asarray(bufs["ev"], np.int64)
+    S = probes.max_samples
+    # chronological unroll: ev is strictly increasing in write order, so
+    # the oldest live slot is the one holding the smallest non-negative ev
+    written = ev >= 0
+    if written.any() and written.all():
+        start = int(np.argmin(ev))
+        order = (np.arange(S, dtype=np.int64) + start) % S
+    else:
+        order = np.argsort(np.where(written, ev, np.iinfo(np.int64).max))
+    t, ev = t[order], ev[order]
+    keep = (ev >= 0) & (t < BIG / 2)
+    nf = num_flows if trim_flows is None else trim_flows
+    nl = num_links if trim_links is None else trim_links
+    channels = {}
+    for ch in probes.channels:
+        arr = np.asarray(bufs[ch], np.float64)[order][keep]
+        channels[ch] = arr[:, :nl] if ch in LINK_CHANNELS else arr[:, :nf]
+    return {
+        "schema": SCHEMA_TS,
+        "stride": probes.stride,
+        "max_samples": probes.max_samples,
+        "t": t[keep],
+        "ev": ev[keep],
+        "channels": channels,
+        "meta": {},
+    }

@@ -43,8 +43,11 @@ import numpy as np
 
 from ..kernels.dispatch import canonicalize_cfg
 from ..nn import mlp
-from .model import (M4Config, predict_size, predict_sldn, spatial_update,
-                    temporal_update)
+from .model import (M4Config, predict_queue, predict_size, predict_sldn,
+                    spatial_update, temporal_update)
+from .probes import (M4_CHANNELS, ProbeConfig, finalize as _probe_finalize,
+                     init_buffers as _probe_init, normalize_probes,
+                     record as _probe_record)
 
 BIG = 1e30
 
@@ -276,8 +279,40 @@ def init_sim_state(params, cfg: M4Config, static, N, num_links: int):
                                jnp.zeros((1,), jnp.float32)]))
 
 
+def _probe_values(params, static, state, N, num_links):
+    """Channel read-out thunks over the post-event carry: the simulator's
+    *belief* about intermediate network state (the quantities the paper
+    densely supervises). Thunks only execute on stride-hit events."""
+
+    def active():
+        return (state["arrived"] & ~state["done"])[:N].astype(jnp.float32)
+
+    def link_queue():
+        # MLP-queue head over every live link hidden state (log1p(KB) scale;
+        # the host-side finalize converts to bytes)
+        return predict_queue(params, state["link_h"][:num_links])
+
+    def link_active():
+        # active-flow count per link via the static path->slot tables —
+        # works for both snapshot impls (the dense path never maintains
+        # link_occ); invalid path slots scatter onto the dump row
+        rows = static["occ_rows"]                            # (N, P)
+        cnt = jnp.zeros((num_links + 1,), jnp.float32).at[rows].add(
+            jnp.broadcast_to(active()[:, None], rows.shape))
+        return cnt[:num_links]
+
+    def flow_remaining():
+        # MLP-size head: remaining *fraction*; zeroed outside a flow's
+        # lifetime so the series reads as size -> 0 over the flow's life
+        return predict_size(params, state["flow_h"][:N]) * active()
+
+    return {"link_queue": link_queue, "link_active": link_active,
+            "flow_remaining": flow_remaining}
+
+
 def _open_loop_core(params, cfg: M4Config, num_links: int, static, arr_order,
-                    arr_times, snapshot_impl="incremental", num_events=None):
+                    arr_times, snapshot_impl="incremental", num_events=None,
+                    probes=None):
     N = arr_times.shape[0]
     legacy = snapshot_impl == "dense"
     step = make_event_step(cfg, static, num_links, snapshot_impl)
@@ -326,32 +361,50 @@ def _open_loop_core(params, cfg: M4Config, num_links: int, static, arr_order,
         return (state, ptr, t_ev), None
 
     length = 2 * N if num_events is None else num_events
-    (state, _, _), _ = jax.lax.scan(body, (state, jnp.int32(0), 0.0),
-                                    None, length=length)
-    return state["fct"][:N], state["done"][:N]
+    if probes is None:
+        # probes-off IS the pre-probe program: same carry, same xs=None
+        # scan, same jaxpr — asserted in tests/test_obs.py
+        (state, _, _), _ = jax.lax.scan(body, (state, jnp.int32(0), 0.0),
+                                        None, length=length)
+        return state["fct"][:N], state["done"][:N]
+
+    bufs0 = _probe_init(probes, num_flows=N, num_links=num_links)
+
+    def body_probed(carry, ev_idx):
+        inner, bufs = carry
+        (state, ptr, t_ev), _ = body(inner, None)
+        vals = _probe_values(params, static, state, N, num_links)
+        bufs = _probe_record(probes, bufs, ev_idx, t_ev, vals)
+        return ((state, ptr, t_ev), bufs), None
+
+    ((state, _, _), bufs), _ = jax.lax.scan(
+        body_probed, ((state, jnp.int32(0), 0.0), bufs0),
+        jnp.arange(length, dtype=jnp.int32))
+    return state["fct"][:N], state["done"][:N], bufs
 
 
 @partial(jax.jit, static_argnums=(1, 2),
-         static_argnames=("snapshot_impl", "num_events"))
+         static_argnames=("snapshot_impl", "num_events", "probes"))
 def _open_loop_scan(params, cfg: M4Config, num_links: int, static, arr_order,
-                    arr_times, snapshot_impl="incremental", num_events=None):
+                    arr_times, snapshot_impl="incremental", num_events=None,
+                    probes=None):
     TRACE_COUNTS["open_loop"] += 1
     return _open_loop_core(params, cfg, num_links, static, arr_order,
-                           arr_times, snapshot_impl, num_events)
+                           arr_times, snapshot_impl, num_events, probes)
 
 
 @partial(jax.jit, static_argnums=(1, 2),
-         static_argnames=("snapshot_impl", "num_events"))
+         static_argnames=("snapshot_impl", "num_events", "probes"))
 def _open_loop_scan_batched(params, cfg: M4Config, num_links: int, static,
                             arr_order, arr_times, snapshot_impl="incremental",
-                            num_events=None):
+                            num_events=None, probes=None):
     """vmap of the open-loop scan over B scenarios padded to one arena shape.
     Scenario axes: every leaf of `static`, plus arr_order/arr_times."""
     TRACE_COUNTS["open_loop_batched"] += 1
 
     def one(s, o, t):
         return _open_loop_core(params, cfg, num_links, s, o, t,
-                               snapshot_impl, num_events)
+                               snapshot_impl, num_events, probes)
 
     return jax.vmap(one)(static, arr_order, arr_times)
 
@@ -380,6 +433,28 @@ class M4Result:
     # unless the entry point ran a warmup call to split the two — without
     # it, `wallclock` on a fresh shape is dominated by compilation.
     compile_wall: float = 0.0
+    # finalized `repro.obs.timeseries/1` dict when a ProbeConfig was passed
+    probes: object = None
+
+
+def _finalize_m4_series(probes, bufs, flows, *, num_flows, num_links,
+                        trim_links=None):
+    """Host-side unit conversion of the raw m4 probe ring: remaining
+    fraction x flow size -> bytes, MLP-queue log1p(KB) head -> bytes."""
+    series = _probe_finalize(probes, bufs, num_flows=num_flows,
+                             num_links=num_links, trim_flows=len(flows),
+                             trim_links=trim_links)
+    ch = series["channels"]
+    if "flow_remaining" in ch:
+        sizes = np.array([f.size for f in flows], np.float64)
+        ch["flow_remaining"] = ch["flow_remaining"] * sizes[None, :]
+    if "link_queue" in ch:
+        ch["link_queue"] = np.expm1(np.maximum(ch["link_queue"], 0.0)) * 1e3
+    series["meta"] = {"backend": "m4",
+                      "units": {"link_queue": "bytes",
+                                "link_active": "flows",
+                                "flow_remaining": "bytes"}}
+    return series
 
 
 def _membership_tables(flow_links: np.ndarray, num_links: int,
@@ -477,15 +552,19 @@ def _arrival_order(static):
 
 
 def simulate_open_loop(params, cfg: M4Config, topo, net_config, flows, *,
-                       warmup=False,
-                       snapshot_impl="incremental") -> M4Result:
+                       warmup=False, snapshot_impl="incremental",
+                       probes: ProbeConfig = None) -> M4Result:
     """One scenario through the open-loop scan.
 
     `warmup=True` runs the scan twice and reports the cold first call
     (trace + compile + run) as `M4Result.compile_wall`, keeping `wallclock`
     steady-state. `snapshot_impl="dense"` switches to the reference
-    builder (tests/benchmark comparisons only)."""
+    builder (tests/benchmark comparisons only). `probes` (a static
+    `ProbeConfig`) additionally records intermediate-state time series
+    into `M4Result.probes`; None compiles the identical probe-free
+    program."""
     cfg = canonicalize_cfg(cfg)
+    probes = normalize_probes(probes, M4_CHANNELS)
     static, num_links, ideal = make_static(topo, flows, net_config, cfg)
     order, times = _arrival_order(static)
     args = (params, cfg, num_links, static, jnp.asarray(order),
@@ -494,26 +573,41 @@ def simulate_open_loop(params, cfg: M4Config, topo, net_config, flows, *,
     if warmup:
         t0 = time.perf_counter()
         jax.block_until_ready(
-            _open_loop_scan(*args, snapshot_impl=snapshot_impl))
+            _open_loop_scan(*args, snapshot_impl=snapshot_impl,
+                            probes=probes))
         compile_wall = time.perf_counter() - t0
     t0 = time.perf_counter()
-    fct, done = _open_loop_scan(*args, snapshot_impl=snapshot_impl)
-    fct = np.asarray(jax.block_until_ready(fct))
+    out = _open_loop_scan(*args, snapshot_impl=snapshot_impl, probes=probes)
+    out = jax.block_until_ready(out)
     wall = time.perf_counter() - t0
+    series = None
+    if probes is None:
+        fct, done = out
+    else:
+        fct, done, bufs = out
+        series = _finalize_m4_series(probes, bufs, flows,
+                                     num_flows=len(flows),
+                                     num_links=num_links)
+    fct = np.asarray(fct)
     return M4Result(fcts=fct, slowdowns=fct / ideal, wallclock=wall,
-                    compile_wall=compile_wall)
+                    compile_wall=compile_wall, probes=series)
 
 
 def simulate_open_loop_batch(params, cfg: M4Config, scenarios, *,
-                             snapshot_impl="incremental") -> list:
+                             snapshot_impl="incremental",
+                             probes: ProbeConfig = None) -> list:
     """Run many scenarios in ONE compiled vmapped scan.
 
     scenarios: sequence of (topo, net_config, flows). Arenas are padded to
     the largest flow/link/degree count in the batch; padded work is dead
     weight in exchange for a single XLA program (no per-scenario retraces)
-    and batch-parallel execution of the event steps.
+    and batch-parallel execution of the event steps. `probes` records
+    per-scenario intermediate-state series (vmapped ring buffers, sliced
+    and trimmed per scenario on the host); the multi-device sharded path
+    is probe-free, so probed batches stay on the vmapped path.
     """
     cfg = canonicalize_cfg(cfg)
+    probes = normalize_probes(probes, M4_CHANNELS)
     scenarios = list(scenarios)
     if not scenarios:
         return []
@@ -537,7 +631,9 @@ def simulate_open_loop_batch(params, cfg: M4Config, scenarios, *,
     times_b = jnp.asarray(np.stack(times))
     D = jax.local_device_count()
     t0 = time.perf_counter()
-    if D > 1 and len(scenarios) >= D and snapshot_impl == "incremental":
+    bufs = None
+    if (D > 1 and len(scenarios) >= D and snapshot_impl == "incremental"
+            and probes is None):
         from .sharding import shard_leaves, unshard
         fct, done = _open_loop_scan_sharded(
             params, cfg, l_max, shard_leaves(batched, D),
@@ -545,16 +641,28 @@ def simulate_open_loop_batch(params, cfg: M4Config, scenarios, *,
         fct = unshard(np.asarray(jax.block_until_ready(fct)),
                       len(scenarios))
     else:
-        fct, done = _open_loop_scan_batched(
+        res = _open_loop_scan_batched(
             params, cfg, l_max, batched, order_b, times_b,
-            snapshot_impl=snapshot_impl)
-        fct = np.asarray(jax.block_until_ready(fct))
+            snapshot_impl=snapshot_impl, probes=probes)
+        res = jax.block_until_ready(res)
+        if probes is None:
+            fct, done = res
+        else:
+            fct, done, bufs = res
+        fct = np.asarray(fct)
     wall = time.perf_counter() - t0
     out = []
     for b, n in enumerate(counts):
         f = fct[b, :n]
+        series = None
+        if bufs is not None:
+            topo_b, _, flows_b = scenarios[b]
+            series = _finalize_m4_series(
+                probes, {k: v[b] for k, v in bufs.items()}, flows_b,
+                num_flows=n_max, num_links=l_max,
+                trim_links=topo_b.num_links)
         out.append(M4Result(fcts=f, slowdowns=f / ideals[b][:n],
-                            wallclock=wall / len(scenarios)))
+                            wallclock=wall / len(scenarios), probes=series))
     return out
 
 

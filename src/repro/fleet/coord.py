@@ -69,10 +69,13 @@ class Coordinator:
         return os.path.exists(self._marker("done", task_id))
 
     def mark_done(self, task_id: str, owner: str, wall_s: float,
-                  attempt: int):
-        _write_json(self._marker("done", task_id),
-                    {"task": task_id, "owner": owner,
-                     "wall_s": wall_s, "attempt": attempt})
+                  attempt: int, extra: Optional[Dict] = None):
+        """`extra` (e.g. a job's `done_extra` divergence stamp) merges
+        into the record; the four bookkeeping keys always win."""
+        rec = dict(extra or {})
+        rec.update({"task": task_id, "owner": owner,
+                    "wall_s": wall_s, "attempt": attempt})
+        _write_json(self._marker("done", task_id), rec)
 
     def done_record(self, task_id: str) -> Optional[dict]:
         return _read_json(self._marker("done", task_id))

@@ -59,6 +59,13 @@ class FleetJob:
         """Blob file paths this task writes (chaos corruption targets)."""
         raise NotImplementedError
 
+    def done_extra(self, payload: dict) -> Optional[dict]:
+        """Optional bookkeeping merged into the task's done marker after a
+        verified run (e.g. per-scenario divergence). Pure telemetry: the
+        worker treats a failure here as 'no extra', never as a task
+        failure."""
+        return None
+
 
 # ------------------------------------------------------------------ sweeps
 @dataclass
@@ -77,6 +84,10 @@ class SweepJob(FleetJob):
     cache_dir: str
     backend_kwargs: Dict[str, Any] = field(default_factory=dict)
     request_options: Dict[str, Any] = field(default_factory=dict)
+    # oracle backend *fingerprint* (see `Backend.fingerprint`): when set,
+    # `done_extra` scores each scenario against the oracle's cached result
+    # and the divergence rides into the task's done marker
+    diff_against: Optional[str] = None
 
     def _backend(self):
         be = getattr(self, "_backend_obj", None)
@@ -113,9 +124,34 @@ class SweepJob(FleetJob):
         store = self._store()
         return [store._path(k) for k in payload["keys"]]
 
+    def done_extra(self, payload: dict) -> Optional[dict]:
+        """Per-scenario mean relative FCT error against `diff_against`'s
+        cache entries — only for scenarios the oracle has already
+        simulated into the same cache (a missing oracle entry is silently
+        skipped: divergence is opportunistic bookkeeping, not a gate)."""
+        if not self.diff_against:
+            return None
+        from ..obs.diff import flow_rel_err
+        from ..scenarios.cache import result_key_raw
+        store = self._store()
+        div: Dict[str, float] = {}
+        for spec, key in zip(payload["specs"], payload["keys"]):
+            mine = store.get(key)
+            if mine is None:
+                continue
+            req = spec.to_request(**self.request_options)
+            oracle = store.get(result_key_raw(req.content_hash(),
+                                              self.diff_against))
+            if oracle is None:
+                continue
+            err = flow_rel_err(mine.fcts, oracle.fcts)
+            div[spec.label] = round(float(err.mean()), 6) if err.size else 0.0
+        return {"divergence": div} if div else None
+
 
 def sweep_job_for(backend, cache_dir: str,
-                  request_options: Optional[dict] = None) -> SweepJob:
+                  request_options: Optional[dict] = None,
+                  diff_against: Optional[str] = None) -> SweepJob:
     """Build a `SweepJob` from a live backend object.
 
     Stateless backends ship as just their name; the m4 backend also
@@ -128,7 +164,8 @@ def sweep_job_for(backend, cache_dir: str,
         kwargs = {"params": _numpyify(backend.params), "cfg": backend.cfg}
     return SweepJob(backend_name=backend.name, cache_dir=cache_dir,
                     backend_kwargs=kwargs,
-                    request_options=dict(request_options or {}))
+                    request_options=dict(request_options or {}),
+                    diff_against=diff_against)
 
 
 def sweep_tasks(specs: Sequence, requests: Sequence, keys: Sequence[str],

@@ -211,8 +211,9 @@ def run_fleet(tasks: List[Task], job: FleetJob, config: FleetConfig,
             for tid in sorted(pending):
                 if coord.is_done(tid):
                     rec = coord.done_record(tid) or {}
-                    if "wall_s" in rec:
-                        wall = float(rec["wall_s"])
+                    wall = rec.get("wall_s")
+                    if wall is not None:
+                        wall = float(wall)
                         deadline.observe(wall)
                         metrics.chunk_wall.observe(wall)
                     pending.discard(tid)

@@ -113,9 +113,14 @@ def worker_entry(worker_index: int, coord_root: str, job: FleetJob,
                         "results unreadable after write: "
                         + ", ".join(m[:12] for m in missing))
                 monkey.pre_done(task_id, claims)
+                try:
+                    extra = job.done_extra(payload)
+                except Exception:       # telemetry only — a finished task
+                    extra = None        # never fails on its bookkeeping
                 with tracer.span("fleet.done"):
                     coord.mark_done(task_id, owner,
-                                    time.perf_counter() - t0, claims)
+                                    time.perf_counter() - t0, claims,
+                                    extra=extra)
                 root.end(status="done")
             except Exception as exc:
                 coord.mark_error(task_id, owner, exc, classify_error(exc))

@@ -1,5 +1,11 @@
 """repro.obs — unified telemetry: metrics registry, trace spans, JAX
-profiling hooks, and exporters shared by sim/serve/train/fleet."""
+profiling hooks, probe time-series, and exporters shared by
+sim/serve/train/fleet.
+
+`repro.obs.diff` (the m4-vs-oracle divergence observatory) is *not*
+imported here: it reaches into repro.scenarios at call time, and eager
+import would tangle the obs <- sim <- scenarios layering. Import it as
+``from repro.obs import diff`` / ``python -m repro.obs.diff``."""
 
 from .registry import (
     SCHEMA,
@@ -26,6 +32,17 @@ from .trace import (
 )
 from .jaxprof import PhaseStats, live_array_bytes, phase
 from .export import lookup, parse_prometheus, to_prometheus
+from .timeseries import (
+    SCHEMA_TS,
+    observe_series,
+    read_series_jsonl,
+    series_distance,
+    series_from_packet_trace,
+    summarize_series,
+    validate_series,
+    validate_series_file,
+    write_series_jsonl,
+)
 
 __all__ = [
     "SCHEMA", "Counter", "Gauge", "Histogram", "MetricsRegistry",
@@ -35,4 +52,7 @@ __all__ = [
     "read_spans", "spans_by_trace", "task_trace_id",
     "PhaseStats", "live_array_bytes", "phase",
     "lookup", "parse_prometheus", "to_prometheus",
+    "SCHEMA_TS", "observe_series", "read_series_jsonl", "series_distance",
+    "series_from_packet_trace", "summarize_series", "validate_series",
+    "validate_series_file", "write_series_jsonl",
 ]

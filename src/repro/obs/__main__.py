@@ -10,7 +10,11 @@
 children must nest inside their root's window, and direct children must
 not overlap nor sum to more than the root wall.  With ``--coord`` it
 additionally requires a closed ``fleet.task`` root for every task the
-fleet marked done.
+fleet marked done.  Probe time-series artifacts (``*.probes.jsonl``,
+written by probed simulation runs / ``repro.obs.diff``) found under
+``--dir`` are structurally validated by ``--check`` and summarized by
+``--flame``; a directory holding only probe files is valid without
+spans.
 """
 
 from __future__ import annotations
@@ -101,7 +105,19 @@ def cmd_trace(spans: List[dict], trace_id: str) -> int:
     return 0
 
 
-def cmd_flame(spans: List[dict]) -> int:
+def _probe_files(dirpath: Optional[str]) -> List[str]:
+    """Every ``*.probes.jsonl`` under `dirpath`, recursively."""
+    if not dirpath or not os.path.isdir(dirpath):
+        return []
+    out = []
+    for root, _dirs, files in os.walk(dirpath):
+        for fname in files:
+            if fname.endswith(".probes.jsonl"):
+                out.append(os.path.join(root, fname))
+    return sorted(out)
+
+
+def cmd_flame(spans: List[dict], dirpath: Optional[str] = None) -> int:
     agg: Dict[str, List[float]] = {}
     for r in spans:
         agg.setdefault(r.get("name") or "?", []).append(_dur(r))
@@ -113,6 +129,21 @@ def cmd_flame(spans: List[dict]) -> int:
         tot = sum(durs)
         print(f"{name:<28} {len(durs):>6} {tot * 1e3:>10.2f} "
               f"{tot / len(durs) * 1e3:>9.3f} {tot / total:>6.1%}")
+    probe_files = _probe_files(dirpath)
+    if probe_files:
+        from .timeseries import read_series_jsonl, summarize_series
+        print(f"\n{len(probe_files)} probe series:")
+        print(f"{'file':<44} {'backend':<14} {'samples':>7}  channels")
+        for path in probe_files:
+            try:
+                s = summarize_series(read_series_jsonl(path))
+            except Exception as e:                          # noqa: BLE001
+                print(f"{os.path.basename(path):<44} <unreadable: {e}>")
+                continue
+            chans = " ".join(
+                f"{n}[{r['dim']}]" for n, r in sorted(s["channels"].items()))
+            print(f"{os.path.basename(path):<44} {s['backend']:<14} "
+                  f"{s['samples']:>7}  {chans}")
     return 0
 
 
@@ -129,11 +160,17 @@ def _done_task_ids(coord: str) -> List[str]:
     return sorted(set(out))
 
 
-def cmd_check(spans: List[dict], coord: Optional[str]) -> int:
+def cmd_check(spans: List[dict], coord: Optional[str],
+              dirpath: Optional[str] = None) -> int:
     problems: List[str] = []
+    probe_files = _probe_files(dirpath)
     traces = spans_by_trace(spans)
-    if not traces:
+    if not traces and not probe_files:
         problems.append("no spans found")
+    if probe_files:
+        from .timeseries import validate_series_file
+        for path in probe_files:
+            problems.extend(validate_series_file(path))
     for tid, recs in sorted(traces.items()):
         roots = _roots(recs)
         if not roots:
@@ -196,6 +233,7 @@ def cmd_check(spans: List[dict], coord: Optional[str]) -> int:
     n_done = len(_done_task_ids(coord)) if coord else 0
     print(f"obs check: OK ({len(traces)} traces, "
           f"{sum(len(v) for v in traces.values())} spans"
+          + (f", {len(probe_files)} probe series" if probe_files else "")
           + (f", {n_done} done tasks stitched" if coord else "") + ")")
     return 0
 
@@ -246,9 +284,9 @@ def main(argv: Optional[List[str]] = None) -> int:
     if args.trace:
         return cmd_trace(spans, args.trace)
     if args.flame:
-        return cmd_flame(spans)
+        return cmd_flame(spans, args.dir)
     if args.check:
-        return cmd_check(spans, args.coord)
+        return cmd_check(spans, args.coord, args.dir)
     return cmd_list(spans)
 
 

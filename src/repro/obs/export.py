@@ -57,17 +57,32 @@ def _labels_text(labels: Mapping[str, str]) -> str:
     return "{" + body + "}"
 
 
+def _escape_help(text: str) -> str:
+    return text.replace("\\", "\\\\").replace("\n", "\\n")
+
+
+def _unescape_help(text: str) -> str:
+    return text.replace("\\n", "\n").replace("\\\\", "\\")
+
+
 def to_prometheus(snapshot: Mapping, prefix: str = "repro",
                   extra_labels: Optional[Mapping[str, str]] = None) -> str:
-    """Render a ``repro.obs/1`` snapshot as Prometheus text format."""
+    """Render a ``repro.obs/1`` snapshot as Prometheus text format.
+
+    Metric descriptions recorded via ``MetricsRegistry.describe`` (the
+    snapshot's ``descriptions`` map, keyed by label-free base name) become
+    the ``# HELP`` text; undescribed metrics keep the generic help line.
+    """
     lines = []
     seen_heads = set()
+    descs = snapshot.get("descriptions") or {}
 
-    def head(name: str, mtype: str) -> None:
+    def head(name: str, mtype: str, base: str) -> None:
         if name in seen_heads:
             return
         seen_heads.add(name)
-        lines.append(f"# HELP {name} repro.obs metric")
+        help_text = _escape_help(descs.get(base) or "repro.obs metric")
+        lines.append(f"# HELP {name} {help_text}")
         lines.append(f"# TYPE {name} {mtype}")
 
     def full_labels(suffix_labels: Mapping[str, str]) -> Dict[str, str]:
@@ -78,19 +93,19 @@ def to_prometheus(snapshot: Mapping, prefix: str = "repro",
     for raw, v in (snapshot.get("counters") or {}).items():
         base, labels = split_labels(raw)
         name = f"{prefix}_{sanitize(base)}_total"
-        head(name, "counter")
+        head(name, "counter", base)
         lines.append(f"{name}{_labels_text(full_labels(labels))} {_fmt(v)}")
 
     for raw, v in (snapshot.get("gauges") or {}).items():
         base, labels = split_labels(raw)
         name = f"{prefix}_{sanitize(base)}"
-        head(name, "gauge")
+        head(name, "gauge", base)
         lines.append(f"{name}{_labels_text(full_labels(labels))} {_fmt(v)}")
 
     for raw, d in (snapshot.get("histograms") or {}).items():
         base, labels = split_labels(raw)
         name = f"{prefix}_{sanitize(base)}"
-        head(name, "summary")
+        head(name, "summary", base)
         h = Histogram.from_dict(d, raw)
         merged = full_labels(labels)
         for q in (0.5, 0.99, 0.999):
@@ -104,15 +119,20 @@ def to_prometheus(snapshot: Mapping, prefix: str = "repro",
     return "\n".join(lines) + "\n"
 
 
-def parse_prometheus(text: str) -> Dict[Tuple[str, frozenset], float]:
+def parse_prometheus(text: str, meta: bool = False):
     """Strictly parse Prometheus text format.
 
     Returns ``{(name, frozenset(label_items)): value}``.  Raises
     ``ValueError`` naming the offending line on any malformed input:
     bad metric names, unparseable label bodies, unknown TYPE values,
     trailing garbage.
+
+    ``meta=True`` additionally returns the ``# HELP``/``# TYPE`` header
+    metadata as a second value — ``{prom_name: {"help": ..., "type": ...}}``
+    — so exported descriptions round-trip through the parser.
     """
     out: Dict[Tuple[str, frozenset], float] = {}
+    heads: Dict[str, Dict[str, str]] = {}
     for lineno, line in enumerate(text.splitlines(), start=1):
         if not line.strip():
             continue
@@ -123,6 +143,11 @@ def parse_prometheus(text: str) -> Dict[Tuple[str, frozenset], float]:
             if m.group(1) == "TYPE" and (m.group(3) or "") not in _TYPES:
                 raise ValueError(
                     f"line {lineno}: unknown TYPE {m.group(3)!r}")
+            entry = heads.setdefault(m.group(2), {})
+            if m.group(1) == "HELP":
+                entry["help"] = _unescape_help(m.group(3) or "")
+            else:
+                entry["type"] = m.group(3) or ""
             continue
         m = _SAMPLE_RE.match(line)
         if m is None:
@@ -147,7 +172,7 @@ def parse_prometheus(text: str) -> Dict[Tuple[str, frozenset], float]:
         if key in out:
             raise ValueError(f"line {lineno}: duplicate sample {name!r}")
         out[key] = float(value)
-    return out
+    return (out, heads) if meta else out
 
 
 def lookup(parsed: Mapping, name: str, **labels: str) -> Optional[float]:

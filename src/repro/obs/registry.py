@@ -186,28 +186,45 @@ class MetricsRegistry:
         self._counters: Dict[str, Counter] = {}
         self._gauges: Dict[str, Gauge] = {}
         self._histograms: Dict[str, Histogram] = {}
+        self._descriptions: Dict[str, str] = {}
 
     # -- get-or-create ---------------------------------------------------
-    def counter(self, name: str) -> Counter:
+    def counter(self, name: str, desc: Optional[str] = None) -> Counter:
         with self._lock:
             c = self._counters.get(name)
             if c is None:
                 c = self._counters[name] = Counter(name)
+            self._describe_locked(name, desc)
             return c
 
-    def gauge(self, name: str) -> Gauge:
+    def gauge(self, name: str, desc: Optional[str] = None) -> Gauge:
         with self._lock:
             g = self._gauges.get(name)
             if g is None:
                 g = self._gauges[name] = Gauge(name)
+            self._describe_locked(name, desc)
             return g
 
-    def histogram(self, name: str) -> Histogram:
+    def histogram(self, name: str, desc: Optional[str] = None) -> Histogram:
         with self._lock:
             h = self._histograms.get(name)
             if h is None:
                 h = self._histograms[name] = Histogram(name)
+            self._describe_locked(name, desc)
             return h
+
+    # -- descriptions ----------------------------------------------------
+    def _describe_locked(self, name: str, desc: Optional[str]) -> None:
+        if desc:
+            base, _ = split_labels(name)
+            self._descriptions.setdefault(base, str(desc))
+
+    def describe(self, name: str, desc: str) -> None:
+        """Attach a human-readable description to a metric (keyed by the
+        label-free base name). Descriptions ride along in snapshots and
+        become Prometheus ``# HELP`` text; first write wins."""
+        with self._lock:
+            self._describe_locked(name, desc)
 
     # -- record ----------------------------------------------------------
     def inc(self, name: str, n: int = 1) -> None:
@@ -225,19 +242,26 @@ class MetricsRegistry:
             counters = {n: c.value for n, c in self._counters.items()}
             gauges = {n: g.value for n, g in self._gauges.items()}
             hists = list(self._histograms.items())
-        return {
+            descs = dict(self._descriptions)
+        out = {
             "schema": SCHEMA,
             "proc": self.proc,
             "counters": dict(sorted(counters.items())),
             "gauges": dict(sorted(gauges.items())),
             "histograms": {n: h.as_dict() for n, h in sorted(hists)},
         }
+        # only present when something was described — committed snapshots
+        # (BENCH_*.json) stay byte-identical for description-free registries
+        if descs:
+            out["descriptions"] = dict(sorted(descs.items()))
+        return out
 
     def reset(self) -> None:
         with self._lock:
             self._counters.clear()
             self._gauges.clear()
             self._histograms.clear()
+            self._descriptions.clear()
 
 
 def merge_snapshots(snaps: Iterable[Mapping]) -> dict:
@@ -246,6 +270,7 @@ def merge_snapshots(snaps: Iterable[Mapping]) -> dict:
     counters: Dict[str, int] = {}
     gauges: Dict[str, float] = {}
     hists: Dict[str, Histogram] = {}
+    descs: Dict[str, str] = {}
     procs: List[str] = []
     for s in snaps:
         if not s:
@@ -261,13 +286,18 @@ def merge_snapshots(snaps: Iterable[Mapping]) -> dict:
                 hists[n].merge(h)
             else:
                 hists[n] = h
-    return {
+        for n, d in (s.get("descriptions") or {}).items():
+            descs.setdefault(n, str(d))
+    out = {
         "schema": SCHEMA,
         "proc": "+".join(procs) if procs else "merged",
         "counters": dict(sorted(counters.items())),
         "gauges": dict(sorted(gauges.items())),
         "histograms": {n: h.as_dict() for n, h in sorted(hists.items())},
     }
+    if descs:
+        out["descriptions"] = dict(sorted(descs.items()))
+    return out
 
 
 def hist_quantiles(d: Mapping, qs=(0.5, 0.99, 0.999)) -> Dict[str, float]:

@@ -21,12 +21,17 @@ from ..runtime.blobstore import BlobStore
 from ..sim import SimRequest, SimResult
 
 
+def result_key_raw(content_hash: str, fingerprint: str) -> str:
+    """Cache key from a request content hash and a backend fingerprint
+    *string* — lets a fleet worker address another backend's entries
+    (e.g. `SweepJob.diff_against`) without holding that backend object."""
+    return hashlib.sha256(f"{content_hash}:{fingerprint}".encode()).hexdigest()
+
+
 def result_key(request: SimRequest, backend) -> str:
     """Cache key: request content x backend identity (name + weights hash
     for parameterized backends — see `Backend.fingerprint`)."""
-    return hashlib.sha256(
-        f"{request.content_hash()}:{backend.fingerprint()}".encode()
-    ).hexdigest()
+    return result_key_raw(request.content_hash(), backend.fingerprint())
 
 
 class ResultCache(BlobStore):

@@ -116,7 +116,8 @@ class SweepRunner:
     """
 
     def __init__(self, backend, *, cache_dir: Optional[str] = None,
-                 chunk_size: Optional[int] = 8, fleet=None):
+                 chunk_size: Optional[int] = 8, fleet=None,
+                 diff_against=None):
         if fleet is not None and cache_dir is None:
             raise ValueError("fleet mode needs a cache_dir: workers hand "
                              "results back through the result cache")
@@ -124,15 +125,20 @@ class SweepRunner:
         self.cache = ResultCache(cache_dir) if cache_dir else None
         self.chunk_size = chunk_size
         self.fleet = fleet
+        # oracle backend (or its fingerprint string) for fleet runs: each
+        # task's done marker gets stamped with per-scenario divergence vs
+        # the oracle's cached results (see repro.obs.diff)
+        self.diff_against = diff_against
 
     def run(self, sweep: Union[Sweep, Sequence[ScenarioSpec]],
             **request_options) -> SweepReport:
         """Execute every spec; request_options forward to `SimRequest`
-        (e.g. seed=, record_events=).
+        (e.g. seed=, record_events=, probes=).
 
-        record_events=True bypasses the cache entirely: cached entries
-        carry only fcts/slowdowns (event logs and `raw` don't round-trip),
-        so serving them would silently drop the data the caller asked for.
+        record_events=True and probes=ProbeConfig(...) bypass the cache
+        entirely: cached entries carry only fcts/slowdowns (event logs,
+        probe series and `raw` don't round-trip), so serving them would
+        silently drop the data the caller asked for.
 
         Cache keys are request-level (hash of the materialized flows), so
         even a fully-cached re-run pays flow generation for every spec —
@@ -149,7 +155,8 @@ class SweepRunner:
         cached = [False] * len(specs)
         keys = [None] * len(specs)
         use_cache = self.cache is not None \
-            and not request_options.get("record_events")
+            and not request_options.get("record_events") \
+            and request_options.get("probes") is None
         if use_cache:
             for i, req in enumerate(requests):
                 keys[i] = result_key(req, self.backend)
@@ -170,11 +177,12 @@ class SweepRunner:
                                             miss, results, request_options)
         elif miss:
             if self.fleet is not None:
-                # record_events bypasses the cache, and the cache is the
-                # fleet's only result channel — run in-process instead
+                # record_events/probes bypass the cache, and the cache is
+                # the fleet's only result channel — run in-process instead
                 raise ValueError("fleet mode cannot serve "
-                                 "record_events=True (results round-trip "
-                                 "through the cache, which drops events)")
+                                 "record_events=True or probes= (results "
+                                 "round-trip through the cache, which drops "
+                                 "events and probe series)")
             # each chunk is one run_many = at most one compiled executable;
             # more means a static arg or padding shape varied mid-sweep
             chunks = 1 if not self.chunk_size else \
@@ -222,8 +230,12 @@ class SweepRunner:
                 results[i] = res
                 self.cache.put(keys[i], res)
             return None
+        oracle_fp = self.diff_against
+        if oracle_fp is not None and hasattr(oracle_fp, "fingerprint"):
+            oracle_fp = oracle_fp.fingerprint()
         job = sweep_job_for(self.backend, self.cache.root,
-                            request_options=request_options)
+                            request_options=request_options,
+                            diff_against=oracle_fp)
         tasks = sweep_tasks([specs[i] for i in miss],
                             [requests[i] for i in miss],
                             [keys[i] for i in miss], self.chunk_size)

@@ -109,17 +109,39 @@ def random_spec(seed: int, *, num_flows: int = 2000,
     tested in tests/test_scenarios.py.
     """
     rng = np.random.default_rng(seed)
-    p = sample_point(rng, synthetic=synthetic)
+    # numpy scalars -> plain floats once, up front: the spec is pure
+    # hashable data and must never hold array-typed leaves
+    p = {k: float(v) if isinstance(v, (int, float, np.floating)) else str(v)
+         for k, v in sample_point(rng, synthetic=synthetic).items()}
     return ScenarioSpec(
         name=f"table2-{'synth' if synthetic else 'emp'}-{seed}",
-        topo="paper", oversub=str(p["oversub"]), cc=str(p["cc"]),
-        net=tuple((k, float(p[k])) for k in NET_KNOBS),
-        size_dist=str(p["size_dist"]), theta=float(p["theta"]),
-        sigma=float(p["sigma"]), max_load=float(p["max_load"]),
-        matrix=str(p["matrix"]), num_flows=num_flows, seed=seed)
+        topo="paper", oversub=p["oversub"], cc=p["cc"],
+        net=tuple((k, p[k]) for k in NET_KNOBS),
+        size_dist=p["size_dist"], theta=p["theta"],
+        sigma=p["sigma"], max_load=p["max_load"],
+        matrix=p["matrix"], num_flows=num_flows, seed=seed)
 
 
 _FIELDS = {f.name for f in dataclasses.fields(ScenarioSpec)}
+
+
+def spec_to_dict(spec: ScenarioSpec) -> dict:
+    """JSON-safe dict of one spec (`net` pairs become lists)."""
+    d = dataclasses.asdict(spec)
+    d["net"] = [[k, v] for k, v in spec.net]
+    return d
+
+
+def spec_from_dict(d: dict) -> ScenarioSpec:
+    """Inverse of `spec_to_dict`; unknown keys are rejected so a stale
+    divergence report can't silently half-build a scenario."""
+    d = dict(d)
+    bad = set(d) - _FIELDS
+    if bad:
+        raise ValueError(f"unknown ScenarioSpec fields {sorted(bad)}")
+    if "net" in d:
+        d["net"] = tuple((str(k), float(v)) for k, v in d["net"])
+    return ScenarioSpec(**d)
 
 
 @dataclass(frozen=True)

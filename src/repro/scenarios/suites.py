@@ -15,12 +15,16 @@ share one definition of each experiment's scenario set:
                         workloads the paper does not cover
     smoke16             16 shape-diverse CPU-sized scenarios (CI + the
                         compile-count acceptance test)
+    divergence_worst    the worst m4-vs-oracle scenarios of a committed
+                        `repro.obs.diff` report (training oversampling)
 """
 from __future__ import annotations
 
+import dataclasses
+import json
 from typing import Callable, Dict, List
 
-from .spec import ScenarioSpec, Sweep
+from .spec import ScenarioSpec, Sweep, spec_from_dict
 
 SUITES: Dict[str, Callable[..., Sweep]] = {}
 
@@ -162,3 +166,23 @@ def smoke16(num_flows: int = 30) -> Sweep:
             num_flows=num_flows + 4 * i, seed=500 + i,
             fan_in=4, participants=4))
     return Sweep("smoke16", tuple(specs))
+
+
+# -------------------------------------------------------------- divergence
+@register_suite("divergence_worst")
+def divergence_worst(report: str = "results/divergence/report.json",
+                     k: int = 8, num_flows: int = 0) -> Sweep:
+    """The K worst-divergence scenarios of a `repro.obs.diff` report,
+    re-materialized from its embedded `worst_specs` — what `repro.train`
+    oversamples to fix exactly where m4 disagrees with the oracle. The
+    report JSON is read directly (no repro.obs.diff import) so building
+    the suite stays jax-free; `num_flows > 0` rescales every spec."""
+    with open(report) as fh:
+        rep = json.load(fh)
+    specs = [spec_from_dict(d) for d in rep.get("worst_specs", [])[:k]]
+    if not specs:
+        raise ValueError(f"{report}: no worst_specs recorded "
+                         "(run `python -m repro.obs.diff` first)")
+    if num_flows:
+        specs = [dataclasses.replace(s, num_flows=num_flows) for s in specs]
+    return Sweep("divergence_worst", tuple(specs))

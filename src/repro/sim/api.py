@@ -47,6 +47,11 @@ class SimRequest:
     until: Optional[float] = None      # stop simulated time (None = run out)
     seed: int = 0                      # backend-internal randomness (packet ECN)
     record_events: bool = False        # fill SimResult.event_* where supported
+    # device-resident intermediate-state capture (repro.core.probes
+    # ProbeConfig); like record_events it is excluded from content_hash —
+    # it changes what is returned, never what is simulated (and the sweep
+    # runner refuses to serve probed requests from the cache)
+    probes: Any = None      # lint-jax: disable=fingerprint-coverage
 
     def __post_init__(self):
         # canonicalize: backends index arenas by fid AND iterate positionally,
@@ -76,8 +81,8 @@ class SimRequest:
         (fid/src/dst/size/arrival/path) and the execution options match —
         byte-stable across processes and machines (floats are hex-encoded,
         no Python `hash()`), so it can key the on-disk sweep result cache
-        (`repro.scenarios.ResultCache`). `record_events` is excluded: it
-        changes what is *returned*, not what is simulated.
+        (`repro.scenarios.ResultCache`). `record_events` and `probes` are
+        excluded: they change what is *returned*, not what is simulated.
         """
         h = hashlib.sha256()
         t = self.topo
@@ -116,4 +121,6 @@ class SimResult:
     event_fids: Optional[np.ndarray] = None
     event_remaining: Optional[tuple] = None    # per-event remaining sizes
     event_queues: Optional[tuple] = None       # arrival events: path queue bytes
+    # `repro.obs.timeseries/1` dict when the request carried a ProbeConfig
+    probes: Optional[dict] = None
     raw: Any = field(default=None, compare=False)

@@ -108,6 +108,16 @@ class Backend:
             f"backend {self.name!r} has no closed-loop session")
 
 
+def _batch_probes(requests: Sequence[SimRequest]):
+    """A vmapped batch shares one compiled program, so every request must
+    carry the same (static) ProbeConfig."""
+    probes = {r.probes for r in requests}
+    if len(probes) > 1:
+        raise ValueError(
+            "run_many requires a uniform `probes` setting across the batch")
+    return probes.pop() if probes else None
+
+
 # ------------------------------------------------------------------- packet
 @register_backend("packet")
 class PacketBackend(Backend):
@@ -133,6 +143,12 @@ class PacketBackend(Backend):
                       event_fids=np.array([e.fid for e in ev]),
                       event_remaining=tuple(tuple(e.remaining) for e in ev),
                       event_queues=tuple(tuple(e.path_queues) for e in ev))
+        if request.probes is not None:
+            # the DES has no device arenas; synthesize the same series
+            # schema host-side from its ground-truth event records
+            from ..obs.timeseries import series_from_packet_trace
+            kw["probes"] = series_from_packet_trace(
+                trace, request.probes, num_flows=len(flows))
         return SimResult(fcts=fcts, slowdowns=sldn, wall_time=wall,
                          backend=self.name, raw=trace, **kw)
 
@@ -182,18 +198,22 @@ class FlowSimFastBackend(Backend):
     def run(self, request: SimRequest) -> SimResult:
         from ..core.flowsim_fast import run_flowsim_fast
         self._check(request)
-        r = run_flowsim_fast(request.topo, list(request.flows))
+        r = run_flowsim_fast(request.topo, list(request.flows),
+                             probes=request.probes)
         return SimResult(fcts=r.fcts, slowdowns=r.slowdowns,
-                         wall_time=r.wallclock, backend=self.name, raw=r)
+                         wall_time=r.wallclock, backend=self.name,
+                         probes=r.probes, raw=r)
 
     def run_many(self, requests: Sequence[SimRequest]) -> List[SimResult]:
         from ..core.flowsim_fast import run_flowsim_fast_batch
         for r in requests:
             self._check(r)
+        probes = _batch_probes(requests)
         results = run_flowsim_fast_batch(
-            [(r.topo, list(r.flows)) for r in requests])
+            [(r.topo, list(r.flows)) for r in requests], probes=probes)
         return [SimResult(fcts=r.fcts, slowdowns=r.slowdowns,
-                          wall_time=r.wallclock, backend=self.name, raw=r)
+                          wall_time=r.wallclock, backend=self.name,
+                          probes=r.probes, raw=r)
                 for r in results]
 
     def closed_loop(self, topo, config, flows):
@@ -248,19 +268,24 @@ class M4Backend(Backend):
         from ..core.simulate import simulate_open_loop
         self._check(request)
         r = simulate_open_loop(self.params, self.cfg, request.topo,
-                               request.config, list(request.flows))
+                               request.config, list(request.flows),
+                               probes=request.probes)
         return SimResult(fcts=r.fcts, slowdowns=r.slowdowns,
-                         wall_time=r.wallclock, backend=self.name, raw=r)
+                         wall_time=r.wallclock, backend=self.name,
+                         probes=r.probes, raw=r)
 
     def run_many(self, requests: Sequence[SimRequest]) -> List[SimResult]:
         from ..core.simulate import simulate_open_loop_batch
         for r in requests:
             self._check(r)
+        probes = _batch_probes(requests)
         results = simulate_open_loop_batch(
             self.params, self.cfg,
-            [(r.topo, r.config, list(r.flows)) for r in requests])
+            [(r.topo, r.config, list(r.flows)) for r in requests],
+            probes=probes)
         return [SimResult(fcts=r.fcts, slowdowns=r.slowdowns,
-                          wall_time=r.wallclock, backend=self.name, raw=r)
+                          wall_time=r.wallclock, backend=self.name,
+                          probes=r.probes, raw=r)
                 for r in results]
 
     def closed_loop(self, topo, config, flows):

@@ -24,6 +24,7 @@ import random
 import numpy as np
 import pytest
 
+from _hypothesis_compat import given, settings, st
 from repro.obs import (MetricsRegistry, Histogram, NULL_SPAN, Tracer,
                        labeled, lookup, merge_snapshots, parse_prometheus,
                        read_spans, spans_by_trace, split_labels,
@@ -108,6 +109,40 @@ def test_merge_snapshots_adds_counters_and_histograms():
     assert h.count == 3
 
 
+def _rand_snapshot(seed: int) -> dict:
+    """A small random registry snapshot (histograms + counters)."""
+    rng = random.Random(seed)
+    reg = MetricsRegistry(proc=f"p{seed}")
+    reg.inc("m.count", rng.randint(0, 5))
+    # integer-valued samples: float addition over them is exact, so the
+    # merged `sum` is associative bit-for-bit (buckets/counts always are)
+    for _ in range(rng.randint(1, 20)):
+        reg.observe("m.wall_s", float(rng.randint(1, 1_000_000)))
+    if rng.random() < 0.5:                 # partially-overlapping keys
+        reg.observe("m.other", float(rng.randint(1, 100)))
+        reg.inc("m.extra")
+    return reg.snapshot()
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 10_000), st.integers(0, 10_000), st.integers(0, 10_000))
+def test_merge_snapshots_is_associative_and_order_invariant(sa, sb, sc):
+    """Counters and histograms merge like a commutative monoid: any
+    grouping and any ordering of the same snapshots yields the same
+    totals and the same buckets. (Gauges are last-write and `proc` is a
+    concatenation — both order-dependent by design, so excluded.)"""
+    a, b, c = (_rand_snapshot(s) for s in (sa, sb, sc))
+
+    def core(s):
+        return (s["counters"], s["histograms"])
+
+    left = merge_snapshots([merge_snapshots([a, b]), c])
+    right = merge_snapshots([a, merge_snapshots([b, c])])
+    flat = merge_snapshots([a, b, c])
+    perm = merge_snapshots([c, a, b])
+    assert core(left) == core(right) == core(flat) == core(perm)
+
+
 # --------------------------------------------------------------- prometheus
 def test_prometheus_roundtrip():
     reg = MetricsRegistry(proc="svc")
@@ -124,6 +159,24 @@ def test_prometheus_roundtrip():
     assert lookup(parsed, "repro_serve_queue_delay_s_count") == 3
     p50 = lookup(parsed, "repro_serve_queue_delay_s", quantile="0.5")
     assert p50 == pytest.approx(0.004, rel=0.1)
+
+
+def test_prometheus_help_text_roundtrips_descriptions():
+    reg = MetricsRegistry(proc="svc")
+    reg.inc("diff.scenarios", 2)
+    reg.describe("diff.scenarios", "scenarios compared, m4 vs oracle")
+    reg.observe("probe.link_queue", 1.5)
+    reg.describe("probe.link_queue", "probe channel link_queue (bytes)")
+    reg.set_gauge("diff.mean_rel_err", 0.13)
+    text = to_prometheus(reg.snapshot())
+    parsed, heads = parse_prometheus(text, meta=True)
+    assert heads["repro_diff_scenarios_total"] == {
+        "help": "scenarios compared, m4 vs oracle", "type": "counter"}
+    assert heads["repro_probe_link_queue"] == {
+        "help": "probe channel link_queue (bytes)", "type": "summary"}
+    # undescribed metrics still get the generic HELP line
+    assert heads["repro_diff_mean_rel_err"]["help"] == "repro.obs metric"
+    assert lookup(parsed, "repro_diff_scenarios_total") == 2
 
 
 @pytest.mark.parametrize("bad", [
@@ -419,6 +472,35 @@ def test_cli_trace_render_and_flame(trace_dir, capsys):
     assert "outer" in out and "inner" in out
     assert obs_cli.main(["--dir", trace_dir, "--flame"]) == 0
     assert "outer" in capsys.readouterr().out
+
+
+# ------------------------------------------------------------------- probes
+def test_probes_off_is_the_identical_program():
+    """`probes=None` is a trace-time branch, not a runtime one: the
+    unprobed call after a probed compile reuses the executable compiled
+    *before* any probe existed (TRACE_COUNTS unchanged), so probes-off
+    events/sec is the pre-probe program's by construction — there is no
+    second unprobed program to regress (the perf gate's BENCH files gate
+    the absolute rate)."""
+    from repro.core.flowsim_fast import TRACE_COUNTS
+    from repro.core.probes import ProbeConfig
+    from repro.sim import get_backend
+
+    backend = get_backend("flowsim_fast")
+    spec = ScenarioSpec(topo="ft-4x2x2", num_flows=6, max_load=0.4)
+    r0 = backend.run(spec.to_request())
+    c0 = sum(TRACE_COUNTS.values())
+    r1 = backend.run(spec.to_request())               # warm: no retrace
+    assert sum(TRACE_COUNTS.values()) == c0
+    rp = backend.run(spec.to_request(
+        probes=ProbeConfig(stride=2, max_samples=8)))
+    cp = sum(TRACE_COUNTS.values())
+    assert cp == c0 + 1                               # probes-on: one program
+    r2 = backend.run(spec.to_request())               # off again: still warm
+    assert sum(TRACE_COUNTS.values()) == cp
+    assert r2.probes is None and rp.probes is not None
+    assert np.array_equal(r0.fcts, r1.fcts)
+    assert np.array_equal(r0.fcts, r2.fcts)           # bitwise-identical
 
 
 # -------------------------------------------------------------------- train

@@ -1,0 +1,341 @@
+"""Device-resident probes + the divergence observatory, asserted end to end.
+
+- `ProbeConfig` static semantics: validation, canonical channel order,
+  backend-support normalization;
+- probed flowsim/m4 runs return bitwise-identical FCTs to unprobed runs
+  (the probe write is a pure side-buffer: same event math, same order);
+- ring-buffer wrap keeps the *last* max_samples samples, chronologically
+  unrolled, with strictly increasing event indices;
+- `SimRequest` plumbing: probes ride outside `content_hash`, `run_many`
+  rejects mixed probe settings, per-scenario channel dims are trimmed to
+  the real flow counts after padded batch execution;
+- the packet oracle synthesizes the same `repro.obs.timeseries/1` schema
+  from its event records;
+- JSONL round-trip (torn-tail tolerant) and the step-hold distance;
+- `repro.obs.diff`: a self-diff scores exactly zero everywhere, reports
+  round-trip through JSON into the registered `divergence_worst` suite,
+  and `python -m repro.obs --check` validates the emitted probe files;
+- the accuracy gate (`benchmarks/perf_gate.py check_accuracy`) passes on
+  the committed baseline and fails on an injected +50% error regression;
+- fleet integration: `SweepJob.diff_against` stamps per-scenario
+  divergence into done markers and `divergence_from_coord` aggregates it.
+"""
+import copy
+import json
+import os
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core.probes import (CHANNELS, FLOWSIM_CHANNELS, M4_CHANNELS,
+                               ProbeConfig, normalize_probes)
+from repro.obs import __main__ as obs_cli
+from repro.obs.timeseries import (read_series_jsonl, series_distance,
+                                  validate_series, write_series_jsonl)
+from repro.scenarios import ScenarioSpec, Sweep, get_suite
+from repro.sim import get_backend
+
+
+def _spec(seed=0, num_flows=8, **kw):
+    kw.setdefault("topo", "ft-4x2x2")
+    kw.setdefault("max_load", 0.4)
+    return ScenarioSpec(num_flows=num_flows, seed=seed, **kw)
+
+
+def _m4_backend():
+    import jax
+    from repro.core.model import M4Config, init_m4
+    cfg = M4Config(hidden=8, gnn_dim=8, mlp_hidden=8, gnn_layers=1,
+                   snap_flows=8, snap_links=16)
+    return get_backend("m4", params=init_m4(jax.random.PRNGKey(0), cfg),
+                       cfg=cfg)
+
+
+# ------------------------------------------------------------------ config
+def test_probe_config_validates_and_canonicalizes():
+    with pytest.raises(ValueError):
+        ProbeConfig(stride=0)
+    with pytest.raises(ValueError):
+        ProbeConfig(max_samples=0)
+    with pytest.raises(ValueError):
+        ProbeConfig(channels=("nope",))
+    # channel order is canonical and deduped => equal configs hash equal
+    a = ProbeConfig(channels=("flow_remaining", "link_queue", "link_queue"))
+    b = ProbeConfig(channels=("link_queue", "flow_remaining"))
+    assert a == b and hash(a) == hash(b)
+    assert a.channels == ("link_queue", "flow_remaining")
+
+
+def test_normalize_probes_intersects_backend_support():
+    p = ProbeConfig(channels=CHANNELS)
+    assert normalize_probes(None, FLOWSIM_CHANNELS) is None
+    assert normalize_probes(p, FLOWSIM_CHANNELS).channels == FLOWSIM_CHANNELS
+    # no supported channel at all => probes fully off
+    only_q = ProbeConfig(channels=("link_queue",))
+    assert normalize_probes(only_q, ("flow_rate",)) is None
+
+
+# ------------------------------------------------------- probed == unprobed
+def test_flowsim_probed_run_is_bitwise_identical():
+    backend = get_backend("flowsim_fast")
+    spec = _spec()
+    plain = backend.run(spec.to_request())
+    probed = backend.run(spec.to_request(
+        probes=ProbeConfig(stride=2, max_samples=32)))
+    assert plain.probes is None and probed.probes is not None
+    assert np.array_equal(plain.fcts, probed.fcts)          # bitwise
+    assert np.array_equal(plain.slowdowns, probed.slowdowns)
+    series = probed.probes
+    assert validate_series(series) == []
+    assert set(series["channels"]) <= set(FLOWSIM_CHANNELS)
+    assert series["channels"]["flow_remaining"].shape[1] == spec.num_flows
+
+
+def test_m4_probed_run_matches_and_compiles_once():
+    from repro.core.simulate import TRACE_COUNTS
+    backend = _m4_backend()
+    spec = _spec(num_flows=6)
+    plain = backend.run(spec.to_request())
+    c0 = sum(TRACE_COUNTS.values())
+    probed = backend.run(spec.to_request(
+        probes=ProbeConfig(stride=2, max_samples=16)))
+    assert sum(TRACE_COUNTS.values()) == c0 + 1     # one new static program
+    again = backend.run(spec.to_request(
+        probes=ProbeConfig(stride=2, max_samples=16)))
+    assert sum(TRACE_COUNTS.values()) == c0 + 1     # same config: warm
+    assert np.array_equal(plain.fcts, probed.fcts)
+    series = probed.probes
+    assert validate_series(series) == []
+    assert set(series["channels"]) <= set(M4_CHANNELS)
+    for name, arr in series["channels"].items():
+        assert np.isfinite(arr).all(), name
+    assert np.array_equal(series["t"], again.probes["t"])
+
+
+def test_ring_buffer_keeps_last_samples_in_order():
+    backend = get_backend("flowsim_fast")
+    spec = _spec()
+    small = ProbeConfig(stride=1, max_samples=4)
+    big = ProbeConfig(stride=1, max_samples=256)     # never wraps here
+    wrapped = backend.run(spec.to_request(probes=small)).probes
+    full = backend.run(spec.to_request(probes=big)).probes
+    assert len(wrapped["ev"]) == 4                   # ring is full
+    assert (np.diff(wrapped["ev"]) > 0).all()        # chronological
+    # the ring holds exactly the LAST 4 stride hits of the full series
+    assert np.array_equal(wrapped["ev"], full["ev"][-4:])
+    assert np.array_equal(wrapped["t"], full["t"][-4:])
+    for ch in wrapped["channels"]:
+        assert np.array_equal(wrapped["channels"][ch],
+                              full["channels"][ch][-4:])
+
+
+# --------------------------------------------------------------- plumbing
+def test_probes_do_not_change_the_content_hash():
+    spec = _spec()
+    plain = spec.to_request()
+    probed = spec.to_request(probes=ProbeConfig(stride=2))
+    assert plain.content_hash() == probed.content_hash()
+
+
+def test_run_many_rejects_mixed_probe_settings():
+    backend = get_backend("flowsim_fast")
+    reqs = [_spec(seed=0).to_request(probes=ProbeConfig(stride=2)),
+            _spec(seed=1).to_request()]
+    with pytest.raises(ValueError, match="uniform"):
+        backend.run_many(reqs)
+
+
+def test_batched_probes_trim_to_per_scenario_dims():
+    backend = get_backend("flowsim_fast")
+    probes = ProbeConfig(stride=2, max_samples=32)
+    reqs = [_spec(seed=0, num_flows=6).to_request(probes=probes),
+            _spec(seed=1, num_flows=10).to_request(probes=probes)]
+    results = backend.run_many(reqs)
+    for req, res in zip(reqs, results):
+        assert validate_series(res.probes) == []
+        rem = res.probes["channels"]["flow_remaining"]
+        assert rem.shape[1] == req.num_flows         # padding trimmed
+
+
+def test_packet_oracle_synthesizes_the_same_schema():
+    backend = get_backend("packet")
+    res = backend.run(_spec(num_flows=6).to_request(
+        probes=ProbeConfig(stride=2, max_samples=64)))
+    series = res.probes
+    assert validate_series(series) == []
+    assert series["meta"]["backend"] == "packet"
+    # the DES knows exact residuals + path occupancy, nothing learned
+    assert set(series["channels"]) == {"flow_remaining", "link_active"}
+
+
+# ------------------------------------------------------------------- JSONL
+def test_series_jsonl_roundtrip_and_torn_tail(tmp_path):
+    backend = get_backend("flowsim_fast")
+    series = backend.run(_spec().to_request(
+        probes=ProbeConfig(stride=2, max_samples=16))).probes
+    path = str(tmp_path / "a.probes.jsonl")
+    write_series_jsonl(series, path)
+    back = read_series_jsonl(path)
+    assert back["schema"] == series["schema"]
+    assert np.allclose(back["t"], series["t"])
+    assert np.array_equal(back["ev"], series["ev"])
+    for ch, arr in series["channels"].items():
+        assert np.allclose(back["channels"][ch], arr, atol=1e-6), ch
+    # a killed writer leaves a torn trailing line: reader stops cleanly
+    with open(path, "a") as fh:
+        fh.write('{"ev": 999, "t": 1.0, "flow_rem')
+    torn = read_series_jsonl(path)
+    assert len(torn["ev"]) == len(series["ev"])
+
+
+def test_series_distance_zero_iff_identical():
+    backend = get_backend("flowsim_fast")
+    probes = ProbeConfig(stride=2, max_samples=32)
+    a = backend.run(_spec().to_request(probes=probes)).probes
+    d0 = series_distance(a, a)
+    assert d0 and all(v == 0.0 for v in d0.values())
+    # scale one channel => positive, normalized distance on that channel
+    b = {**a, "channels": dict(a["channels"])}
+    b["channels"]["flow_remaining"] = a["channels"]["flow_remaining"] * 2.0
+    d = series_distance(b, a)
+    assert d["flow_remaining"] > 0.0
+    assert d.get("link_active", 0.0) == 0.0
+    # mismatched entity dims are skipped, not compared
+    c = {**a, "channels": {"flow_remaining":
+                           a["channels"]["flow_remaining"][:, :2]}}
+    assert "flow_remaining" not in series_distance(c, a)
+
+
+# ---------------------------------------------------------------- observatory
+def test_diff_sweep_self_diff_scores_zero(tmp_path):
+    from repro.obs.diff import diff_sweep, read_report, worst_suite, \
+        write_report
+    backend = get_backend("flowsim_fast")
+    suite = Sweep("selfdiff", (
+        _spec(seed=0, cc="dctcp"),
+        _spec(seed=1, cc="timely", size_dist="exp"),
+    ))
+    probes_dir = str(tmp_path / "probes")
+    report = diff_sweep(suite, backend, backend, cache_dir=None,
+                        chunk_size=None,
+                        probes=ProbeConfig(stride=2, max_samples=32),
+                        probes_dir=probes_dir)
+    assert report["schema"] == "repro.obs.diff/1"
+    assert report["summary"]["scenarios"] == 2
+    assert report["summary"]["mean_rel_err"] == 0.0
+    for prof in report["profiles"]:
+        assert prof["mean_rel_err"] == 0.0
+        assert prof["probe_distance"]                  # probed on both sides
+        assert all(v == 0.0 for v in prof["probe_distance"].values())
+    # two specs, two distinct Table-2 families
+    assert len(report["families"]) == 2
+    assert {len(report["clusters"])} <= {1, 2}
+    # registry snapshot rode along
+    assert report["obs"]["histograms"]
+    # emitted probe files pass the CI gate (a self-diff writes one file
+    # per scenario: both sides share the backend name, so the second
+    # write lands on the first one's path)
+    files = sorted(os.listdir(probes_dir))
+    assert len(files) == 2
+    assert obs_cli.main(["--dir", probes_dir, "--check"]) == 0
+    # report round-trips into the registered training suite
+    path = write_report(report, str(tmp_path / "report.json"))
+    rep = read_report(path)
+    ws = worst_suite(rep, k=2, num_flows=5)
+    assert len(ws) == 2 and all(s.num_flows == 5 for s in ws)
+    reg = get_suite("divergence_worst", report=path, k=1)
+    assert len(reg) == 1
+    assert reg.specs[0].label == rep["summary"]["worst_scenario"]
+
+
+def test_read_report_rejects_wrong_schema(tmp_path):
+    from repro.obs.diff import read_report
+    path = tmp_path / "bad.json"
+    path.write_text(json.dumps({"schema": "other/1"}))
+    with pytest.raises(ValueError, match="repro.obs.diff/1"):
+        read_report(str(path))
+
+
+def test_cluster_groups_scenarios_that_diverge_alike():
+    from repro.obs.diff import DivergenceProfile, cluster_profiles
+    def prof(label, err):
+        return DivergenceProfile(
+            label=label, family="f", num_flows=4, mean_rel_err=err,
+            p90_rel_err=err * 2, sldn_delta={"p50": err, "p90": err,
+                                             "p99": err},
+            probe_distance={}, score=err)
+    profiles = [prof("a", 1.0), prof("b", 0.98), prof("c", 0.05)]
+    clusters = cluster_profiles(profiles)
+    assert len(clusters) == 2
+    assert sorted(clusters[0]["scenarios"]) == ["a", "b"]   # worst first
+    assert clusters[1]["scenarios"] == ["c"]
+
+
+# ----------------------------------------------------------- accuracy gate
+def _perf_gate():
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..",
+                                    "benchmarks"))
+    import perf_gate
+    return perf_gate
+
+
+def test_accuracy_gate_passes_baseline_and_fails_injected_regression():
+    perf_gate = _perf_gate()
+    base_path = os.path.join(os.path.dirname(__file__), "..",
+                             "BENCH_accuracy.json")
+    with open(base_path) as fh:
+        baseline = json.load(fh)
+    quiet = lambda *a, **k: None                            # noqa: E731
+    # the committed file gates itself
+    assert perf_gate.check_accuracy(baseline, baseline, log=quiet) == []
+    # +50% pooled error: both gated summary keys trip at 20% tolerance
+    worse = copy.deepcopy(baseline)
+    worse["summary"]["mean_rel_err"] *= 1.5
+    worse["summary"]["p90_rel_err"] *= 1.5
+    fails = perf_gate.check_accuracy(worse, baseline, log=quiet)
+    assert len(fails) == 2
+    assert any("mean_rel_err" in f for f in fails)
+    # structural: a changed scenario set invalidates the comparison
+    shrunk = copy.deepcopy(baseline)
+    shrunk["entries"] = shrunk["entries"][:-1]
+    fails = perf_gate.check_accuracy(shrunk, baseline, log=quiet)
+    assert any("scenario set changed" in f for f in fails)
+    # structural: a changed flow count is flagged per scenario
+    bent = copy.deepcopy(baseline)
+    bent["entries"][0]["flows"] += 1
+    fails = perf_gate.check_accuracy(bent, baseline, log=quiet)
+    assert any("flows" in f for f in fails)
+
+
+# -------------------------------------------------------------------- fleet
+def test_fleet_done_markers_carry_divergence(tmp_path):
+    from repro.fleet.coord import Coordinator
+    from repro.fleet.jobs import sweep_job_for, sweep_tasks
+    from repro.obs.diff import divergence_from_coord
+    from repro.scenarios.cache import result_key
+    from repro.scenarios.runner import SweepRunner
+
+    backend = get_backend("flowsim")
+    specs = [_spec(seed=0), _spec(seed=1)]
+    cache = str(tmp_path / "cache")
+    # populate the shared cache (both "mine" and the oracle's entries —
+    # a self-diff, so the stamped divergence must be exactly zero)
+    SweepRunner(backend, cache_dir=cache, chunk_size=None).run(specs)
+    reqs = [s.to_request() for s in specs]
+    keys = [result_key(r, backend) for r in reqs]
+    job = sweep_job_for(backend, cache,
+                        diff_against=backend.fingerprint())
+    (task_id, payload), = sweep_tasks(specs, reqs, keys, None)
+    extra = job.done_extra(payload)
+    assert extra == {"divergence": {s.label: 0.0 for s in specs}}
+    # the coordinator merges it into the done marker (bookkeeping wins)
+    coord = Coordinator(str(tmp_path / "coord"))
+    coord.mark_done(task_id, "w0", 0.1, 1, extra=extra)
+    rec = coord.done_record(task_id)
+    assert rec["task"] == task_id and rec["divergence"] == extra["divergence"]
+    agg = divergence_from_coord(str(tmp_path / "coord"))
+    assert agg["tasks"] == 1 and agg["mean_rel_err"] == 0.0
+    assert sorted(agg["scenarios"]) == sorted(s.label for s in specs)
+    # without an oracle fingerprint the stamp is simply absent
+    assert sweep_job_for(backend, cache).done_extra(payload) is None
